@@ -1,0 +1,55 @@
+"""Fig 2/3 surrogate: network throughput/latency + CPU overhead curves.
+
+Real NICs are absent; the InfiniBand/Ethernet side comes from the paper's
+calibrated model (repro.core.costmodel). What IS measured here: the local
+memory-bandwidth constant c_mem (the paper's comparison baseline) and the
+per-op dispatch overhead of the one-sided-style ops (the 450-cycle analogue).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel, nam
+
+
+def _timeit(f, *args, n=5):
+    f(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run():
+    rows = []
+    # measured: local memory copy bandwidth (c_mem calibration)
+    for mb in (1, 16, 64):
+        x = jnp.ones((mb * 1024 * 1024 // 4,), jnp.float32)
+        us = _timeit(lambda a: a + 1.0, x)
+        bw = mb / (us / 1e6) / 1024  # GB/s
+        rows.append((f"fig2/mem_copy_{mb}MB", us, f"{bw:.1f}GB/s"))
+    # measured: one-sided op dispatch overhead (read/write/cas on NAM region)
+    region = jnp.zeros((1 << 16, 16), jnp.float32)
+    words = jnp.zeros((1 << 16,), jnp.uint32)
+    idx = jnp.arange(256, dtype=jnp.int32)
+    rows.append(("fig2/nam_read_256rows",
+                 _timeit(jax.jit(nam.read), region, idx), ""))
+    rows.append(("fig2/nam_cas_256reqs",
+                 _timeit(jax.jit(nam.cas), words, idx,
+                         jnp.zeros(256, jnp.uint32),
+                         jnp.ones(256, jnp.uint32)), ""))
+    # modeled: paper's latency curves (1/2 RTT) per message size
+    for size in (8, 256, 2048, 32768, 1 << 20):
+        for net in ("ipoeth", "ipoib", "rdma"):
+            lat_us = (costmodel.t_net(size, net)
+                      + {"ipoeth": 30e-6, "ipoib": 20e-6,
+                         "rdma": 1e-6}[net]) * 1e6
+            rows.append((f"fig2/model_latency_{net}_{size}B", lat_us,
+                         f"{size/ (lat_us/1e6) / 1e9:.2f}GB/s"))
+    # modeled: per-message CPU cycles (Fig 3)
+    for net, cyc in costmodel.CYCLES_PER_MSG.items():
+        rows.append((f"fig3/model_cpu_cycles_{net}", 0.0, f"{cyc}cycles"))
+    return rows

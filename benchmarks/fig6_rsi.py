@@ -1,0 +1,82 @@
+"""Fig 6: RSI vs traditional 2PC/SI scaling (trx/s vs #clients).
+
+Two layers, per the repro methodology:
+  measured — wall-clock of the actual jitted RSI commit (compute path) on
+             the TPC-W-checkout workload of §4.3;
+  modeled  — the paper's message economics (CPU cycles/message from Fig 3 +
+             bandwidth caps) per architecture variant, which is what the
+             8-node InfiniBand cluster actually gates on.
+
+Paper's measured endpoints at 70 clients: SN/IPoEth ~32K, SN/IPoIB ~22K,
+SM/2-sided ~1.1M (peak, degrading), NAM/RSI ~1.8M (network-capped 2.4M).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_nam import OLTP
+from repro.core import costmodel, rsi
+
+
+def _measured_local_txn_rate():
+    cfg = rsi.StoreCfg(num_records=100_000, payload_words=4)
+    store = rsi.init_store(cfg)
+    store["words"] = store["words"].at[:].set(jnp.uint32(1))
+    store["cids"] = store["cids"].at[:, 0].set(1)
+    T, W = 1024, 7
+    key = jax.random.PRNGKey(0)
+    prods = jax.random.randint(key, (T, 3), 0, 100_000)
+    inserts = 90_000 + jnp.arange(T * 4).reshape(T, 4) % 9000
+    txns = rsi.TxnBatch(
+        write_recs=jnp.concatenate([prods, inserts], 1).astype(jnp.int32),
+        read_cids=jnp.concatenate([jnp.ones((T, 3), jnp.uint32),
+                                   jnp.zeros((T, 4), jnp.uint32)], 1),
+        new_payload=jnp.ones((T, W, 4), jnp.uint32),
+        cid=(2 + jnp.arange(T)).astype(jnp.uint32))
+    commit = jax.jit(rsi.commit)
+    ok, _ = commit(store, txns)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        ok, _ = commit(store, txns)
+    jax.block_until_ready(ok)
+    dt = (time.perf_counter() - t0) / 3
+    return T / dt, dt / T * 1e6
+
+
+def model_curves(clients=70):
+    """trx/s at `clients` concurrent clients per §4.1.3/§4.3 economics."""
+    m = costmodel.OltpModel()
+    work_us = 20.0                       # per-txn compute (10-60us in paper)
+    out = {}
+    for net in ("ipoeth", "ipoib"):
+        # server CPU bound: 3 servers handle 5+8n messages/txn
+        cap = m.trx_upper_bound_cpu(3, net)
+        lat = work_us * 1e-6 + 6 * ({"ipoeth": 35e-6, "ipoib": 25e-6}[net])
+        out[f"sn_{net}"] = min(clients / lat, cap)
+    # shared-memory 2-sided RDMA: TM CPU-bound at 450 cycles/msg x 2 sides,
+    # degrades past ~40 clients (paper: 1.1M peak -> 320K at 70)
+    cap2 = m.trx_upper_bound_cpu(3, "rdma")
+    lat2 = work_us * 1e-6 + 6 * 1e-6
+    out["sm_2sided"] = min(clients / lat2, cap2) * (0.5 if clients > 40 else 1)
+    # NAM/RSI: zero server CPU; capped by RNIC bandwidth only
+    lat_rsi = work_us * 1e-6 + 3 * 2e-6
+    out["nam_rsi"] = min(clients / lat_rsi, m.rsi_bound())
+    return out
+
+
+def run():
+    rows = []
+    rate, us = _measured_local_txn_rate()
+    rows.append(("fig6/measured_rsi_commit_local", us,
+                 f"{rate:,.0f}txn/s_compute_only"))
+    for clients in (10, 40, 70):
+        for name, v in model_curves(clients).items():
+            rows.append((f"fig6/model_{name}_c{clients}", 0.0,
+                         f"{v:,.0f}txn/s"))
+    # the paper's ordering must hold at 70 clients
+    c = model_curves(70)
+    assert c["nam_rsi"] > c["sm_2sided"] > c["sn_ipoeth"] > 0
+    rows.append(("fig6/ordering_nam>2sided>ipoeth", 0.0, "holds"))
+    return rows

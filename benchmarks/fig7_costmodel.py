@@ -1,0 +1,26 @@
+"""Fig 7: join cost analysis curves (both subfigures) from §5.1 formulas."""
+from repro.core import costmodel
+
+
+def run():
+    rows = []
+    nr = ns = 1_000_000 * 8          # |R|=|S|=1M x 8B tuples
+    for sel in (0.1, 0.25, 0.5, 0.75, 1.0):
+        for net in ("ipoeth", "ipoib", "rdma"):
+            ghj = costmodel.t_ghj(nr, ns, net)
+            red = costmodel.t_ghj_bloom(nr, ns, net, sel)
+            rows.append((f"fig7/{net}_sel{sel}_GHJ", ghj * 1e6, ""))
+            rows.append((f"fig7/{net}_sel{sel}_GHJ+Red", red * 1e6,
+                         "wins" if red < ghj else "loses"))
+        rows.append((f"fig7/rdma_sel{sel}_RDMA_GHJ",
+                     costmodel.t_rdma_ghj(nr, ns) * 1e6, ""))
+        rows.append((f"fig7/rdma_sel{sel}_RRJ",
+                     costmodel.t_rrj(nr, ns) * 1e6, ""))
+    # paper claims encoded:
+    assert costmodel.t_ghj_bloom(nr, ns, "ipoeth", 0.5) \
+        < costmodel.t_ghj(nr, ns, "ipoeth")           # reduction wins on eth
+    assert costmodel.t_ghj_bloom(nr, ns, "ipoib", 0.9) \
+        > costmodel.t_ghj(nr, ns, "ipoib")            # loses at sel>0.8 IPoIB
+    assert costmodel.t_rrj(nr, ns) <= costmodel.t_rdma_ghj(nr, ns)
+    rows.append(("fig7/claims", 0.0, "all_hold"))
+    return rows

@@ -1,0 +1,48 @@
+"""Fig 8(a): measured join runtimes — GHJ / GHJ+Red / RDMA-GHJ / RRJ over
+bloom selectivities {0.25, 0.5, 0.75, 1.0}.
+
+|R|=|S| scaled to 2^20/node for the CPU container (paper: 128M/node); the
+four variants share identical local join code so the deltas isolate the
+shuffle/partition strategy, as in the paper.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import shuffle
+
+
+def _rel(sel: float, n: int = 1 << 20):
+    key = jax.random.PRNGKey(int(sel * 100))
+    rk = jax.random.permutation(key, jnp.arange(1, n + 1, dtype=jnp.uint32))
+    rv = rk
+    # S keys: a `sel` fraction has matches in R, rest miss (keys > n)
+    hits = jax.random.randint(jax.random.fold_in(key, 1), (n,), 1, n + 1)
+    miss = jax.random.randint(jax.random.fold_in(key, 2), (n,), n + 1, 2 * n)
+    take = jax.random.uniform(jax.random.fold_in(key, 3), (n,)) < sel
+    sk = jnp.where(take, hits, miss).astype(jnp.uint32)
+    return rk, rv, sk, jnp.ones((n,), jnp.uint32)
+
+
+def run():
+    rows = []
+    mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
+    fns = {v: jax.jit(shuffle.make_distributed_join(mesh, "data", v))
+           for v in ("ghj", "ghj_bloom", "rdma_ghj", "rrj")}
+    for sel in (0.25, 0.5, 0.75, 1.0):
+        rk, rv, sk, sv = _rel(sel)
+        base = None
+        for name, f in fns.items():
+            r = f(rk, rv, sk, sv)       # warm/compile
+            t0 = time.perf_counter()
+            for _ in range(3):
+                r = f(rk, rv, sk, sv)
+            jax.block_until_ready(r)
+            us = (time.perf_counter() - t0) / 3 * 1e6
+            if name == "ghj":
+                base = us
+            rows.append((f"fig8a/sel{sel}_{name}", us,
+                         f"{base/us:.2f}x_vs_GHJ" if base else ""))
+    return rows

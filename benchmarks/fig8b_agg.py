@@ -1,0 +1,44 @@
+"""Fig 8(b): aggregation — hierarchical Dist-AGG vs RDMA-AGG over distinct
+group counts (paper sweeps 1 -> 64M; scaled to the CPU container).
+
+Claim reproduced: Dist-AGG cost grows with #groups (the global union is
+#nodes x #groups rows); RDMA-AGG stays flat-ish (owner-partitioned
+post-aggregation). Also times the Pallas grouped_agg pre-aggregation kernel.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+from repro.kernels import ops
+
+
+def run():
+    rows = []
+    n = 1 << 20
+    mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.randint(key, (n,), 0, 1 << 30).astype(jnp.uint32)
+    vals = jnp.ones((n,), jnp.uint32)
+    for groups in (1, 64, 4096, 262_144):
+        for name, mkf in (("dist_agg", aggregation.dist_agg),
+                          ("rdma_agg", aggregation.rdma_agg)):
+            f = jax.jit(mkf(mesh, "data", groups))
+            r = f(keys, vals)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                r = f(keys, vals)
+            jax.block_until_ready(r)
+            us = (time.perf_counter() - t0) / 3 * 1e6
+            rows.append((f"fig8b/groups{groups}_{name}", us, ""))
+    # kernel-level pre-aggregation (phase 1 hot loop)
+    slot = (keys % jnp.uint32(2048)).astype(jnp.int32)
+    fv = vals.astype(jnp.float32)
+    r = ops.grouped_agg(slot, fv, 2048)
+    t0 = time.perf_counter()
+    r = ops.grouped_agg(slot, fv, 2048)
+    jax.block_until_ready(r)
+    rows.append(("fig8b/kernel_grouped_agg_1M_2048slots",
+                 (time.perf_counter() - t0) * 1e6, "interpret_mode"))
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6]
+
+Prints ``name,us_per_call,derived`` CSV. Fig 2/3 are model+calibration
+surrogates (no real NIC here); Fig 6 combines the measured RSI commit path
+with the paper's message-economics model; Fig 7 is the analytic cost model;
+Fig 8a/8b are measured end-to-end operator runtimes.
+"""
+import argparse
+import sys
+
+from benchmarks import (fig2_microbench, fig6_rsi, fig7_costmodel,
+                        fig8a_joins, fig8b_agg)
+
+MODULES = {
+    "fig2": fig2_microbench,
+    "fig6": fig6_rsi,
+    "fig7": fig7_costmodel,
+    "fig8a": fig8a_joins,
+    "fig8b": fig8b_agg,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(MODULES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else sorted(MODULES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            for row, us, derived in MODULES[name].run():
+                print(f"{row},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, e))
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {[n for n, _ in failed]}")
+
+
+if __name__ == "__main__":
+    main()

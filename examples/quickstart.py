@@ -1,0 +1,56 @@
+"""Quickstart: build a reduced arch, run a forward pass, one train step, and
+a few decode steps — all on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch glm4-9b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.models import api
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import build_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch))
+    print(f"arch={cfg.name} family={cfg.family}")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n:,}")
+
+    B, S = 2, 64
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    batch["labels"] = batch["tokens"]
+    if cfg.modality_dim:
+        batch["modality"] = jnp.ones(
+            (B, cfg.num_modality_tokens, cfg.modality_dim), jnp.float32)
+
+    logits, _ = api.forward(cfg, params, batch["tokens"],
+                            modality=batch.get("modality"))
+    print(f"forward: logits {logits.shape}")
+
+    opt = make_optimizer(cfg.optimizer)
+    step = jax.jit(build_train_step(cfg, opt), donate_argnums=(0, 1))
+    params, opt_state, m = step(params, opt.init(params), batch)
+    print(f"train step: loss={float(m['loss']):.4f} "
+          f"gnorm={float(m['grad_norm']):.4f}")
+
+    mod = (batch.get("modality") if cfg.modality_dim else None)
+    state = api.init_decode_state(cfg, params, B, 32, modality=mod)
+    tok = batch["tokens"][:, :1]
+    for i in range(5):
+        logits, state = api.decode_step(cfg, params, state, tok)
+        tok = jnp.argmax(logits, axis=-1)
+    print(f"decode: 5 tokens, last={tok[:, 0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

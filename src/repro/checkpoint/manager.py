@@ -1,0 +1,111 @@
+"""Checkpointing with CAS-versioned manifests (decentralized metadata, §3.2).
+
+Every save writes array data to a content-addressed step directory, then
+*commits* by atomically renaming a manifest into place — the filesystem
+analogue of the paper's remote-memory CAS on metadata: any host can commit,
+concurrent committers race on the rename and exactly one wins, and a crash
+mid-save leaves no partially-visible checkpoint (fault tolerance).
+
+Restore is *elastic*: arrays are stored unsharded (host numpy) and are
+device_put onto whatever mesh/policy the restoring job uses — a job can
+restart on a different topology (checkpoint/restart + elastic scaling).
+Async saves run on a background thread so the step loop keeps going.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = cf.ThreadPoolExecutor(max_workers=1)
+        self._pending = None
+
+    # ------------------------------------------------------------- save --
+
+    def save(self, step: int, tree, *, extra: dict = None,
+             async_: bool = False):
+        host_tree = jax.tree.map(np.asarray, tree)   # device -> host copy
+        if async_:
+            self.wait()
+            self._pending = self._pool.submit(self._write, step, host_tree,
+                                              extra or {})
+            return None
+        return self._write(step, host_tree, extra or {})
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, host_tree, extra: dict):
+        leaves, treedef = _flatten(host_tree)
+        tmp = os.path.join(self.dir, f".tmp-{step}-{os.getpid()}-{time.time_ns()}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": l for i, l in enumerate(leaves)})
+        manifest = {"step": step, "num_arrays": len(leaves),
+                    "extra": extra, "time": time.time()}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(self.dir, f"step-{step:010d}")
+        try:
+            os.rename(tmp, final)                 # CAS commit: one winner
+        except OSError:
+            shutil.rmtree(tmp, ignore_errors=True)  # lost the race: discard
+            return final
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step-{s:010d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore --
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step-"):
+                out.append(int(name.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like_tree, *, step: int = None, shardings=None):
+        """Restore into the structure of `like_tree`; optionally device_put
+        with `shardings` (same treedef) — elastic reshard onto any mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step-{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves, treedef = _flatten(like_tree)
+        assert manifest["num_arrays"] == len(leaves), "tree mismatch"
+        new_leaves = [data[f"a{i}"] for i in range(len(leaves))]
+        tree = jax.tree.unflatten(treedef, new_leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, manifest

@@ -1,0 +1,43 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, MoECfg, MLACfg, SSMCfg,
+                                ShapeCfg, SHAPES, supports_shape,
+                                reduce_config)
+
+_ARCH_MODULES = {
+    "jamba-1.5-large-398b":      "repro.configs.jamba_1_5_large_398b",
+    "starcoder2-15b":            "repro.configs.starcoder2_15b",
+    "glm4-9b":                   "repro.configs.glm4_9b",
+    "granite-34b":               "repro.configs.granite_34b",
+    "granite-20b":               "repro.configs.granite_20b",
+    "whisper-base":              "repro.configs.whisper_base",
+    "mamba2-370m":               "repro.configs.mamba2_370m",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "deepseek-v2-236b":          "repro.configs.deepseek_v2_236b",
+    "llama-3.2-vision-90b":      "repro.configs.llama_3_2_vision_90b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def all_cells():
+    """Yield every (arch, shape, runnable, reason) dry-run cell."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = supports_shape(cfg, shape)
+            yield arch, shape.name, ok, why
+
+
+__all__ = ["ModelConfig", "MoECfg", "MLACfg", "SSMCfg", "ShapeCfg", "SHAPES",
+           "ARCH_IDS", "get_config", "supports_shape", "reduce_config",
+           "all_cells"]

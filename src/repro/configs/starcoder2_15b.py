@@ -1,0 +1,17 @@
+"""starcoder2-15b — dense, GQA, RoPE. [arXiv:2402.19173; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    head_dim=128,
+    gated_mlp=False,
+    rope_theta=1e5,
+    source="arXiv:2402.19173; hf",
+)

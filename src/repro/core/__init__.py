@@ -1,0 +1,7 @@
+# The paper's primary contribution: the NAM architecture (storage/compute
+# decoupling, one-sided ops), the RSI commit protocol, and the RDMA-adapted
+# OLAP operators (radix shuffle joins, background-flush aggregation), plus
+# the network-aware cost model that drives the roofline/sharding decisions.
+from repro.core.nam import NamPool
+
+__all__ = ["NamPool"]

@@ -1,0 +1,30 @@
+"""Bloom filter (jnp) for the semi-join reduction baseline (paper §5.1.2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_PRIMES = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1)
+
+
+def _hash(keys, seed: int, m: int):
+    h = (keys.astype(jnp.uint32) * jnp.uint32(_PRIMES[seed % len(_PRIMES)])
+         + jnp.uint32(seed * 0x01000193))
+    h ^= h >> 15
+    h *= jnp.uint32(0x2C1B3C6D)
+    h ^= h >> 12
+    return (h % jnp.uint32(m)).astype(jnp.int32)
+
+
+def build(keys, m_bits: int, k: int = 3):
+    bits = jnp.zeros((m_bits,), bool)
+    for s in range(k):
+        bits = bits.at[_hash(keys, s, m_bits)].set(True)
+    return bits
+
+
+def query(bits, keys, k: int = 3):
+    m = bits.shape[0]
+    out = jnp.ones(keys.shape, bool)
+    for s in range(k):
+        out &= bits[_hash(keys, s, m)]
+    return out

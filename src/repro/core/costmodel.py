@@ -1,0 +1,137 @@
+"""Network-aware cost models.
+
+1. The paper's OLAP join cost model (§5.1) — reproduces Fig 7.
+2. The paper's OLTP message model (§4.1.3) — feeds Fig 6.
+3. TPU v5e roofline constants + three-term roofline (compute / HBM /
+   collective) used by the dry-run analysis and the sharding planner — the
+   paper's point that the optimizer must track *which* resource bottlenecks
+   ("bottlenecks can shift from one component to another").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------- paper ---
+
+C_MEM = 1e-9                       # s/byte — paper's main-memory constant
+# idealized s/byte at 2KB messages (paper §2 microbenchmarks)
+C_NET = {
+    "ipoeth": 1 / 0.125e9,         # 1 GbE
+    "ipoib":  1 / 3.5e9,           # IPoIB ceiling measured in Fig 2
+    "rdma":   1 / 6.8e9,           # FDR 4x per port
+}
+# per-message CPU cycles (Fig 3, small messages)
+CYCLES_PER_MSG = {"ipoeth": 7544, "ipoib": 13264, "rdma": 450}
+BLOOM_ERROR = 0.10
+
+
+def t_mem(nbytes):
+    return nbytes * C_MEM
+
+
+def t_net(nbytes, net: str):
+    return nbytes * C_NET[net]
+
+
+def t_part(nbytes, net: str):
+    """Repartition cost (§5.1.1): read + wire + materialize."""
+    return 2 * t_mem(nbytes) + t_net(nbytes, net)
+
+
+def t_join_radix(nbytes_r, nbytes_s):
+    """Local radix join: two memory-bound passes over both sides."""
+    return 2 * (t_mem(nbytes_r) + t_mem(nbytes_s))
+
+
+def t_ghj(nr, ns, net: str):
+    """|R|,|S| in bytes. T = (wR+wS)(4 c_mem + c_net)."""
+    return t_part(nr, net) + t_part(ns, net) + t_join_radix(nr, ns)
+
+
+def t_ghj_bloom(nr, ns, net: str, sel: float):
+    """Semi-join reduction (§5.1.2); sel = join selectivity, bloom error
+    inflates the shipped fraction."""
+    eff = min(sel + BLOOM_ERROR * (1 - sel), 1.0)
+    create = t_mem(nr) + t_mem(ns)          # build both bloom filters
+    part = t_part(eff * nr, net) + t_part(eff * ns, net)
+    join = t_join_radix(eff * nr, eff * ns)
+    return create + part + join
+
+
+def t_rdma_ghj(nr, ns, net: str = "rdma"):
+    """RDMA GHJ (§5.2): receiver writes happen in the background
+    (selective signaling) => partition cost is one memory pass per side."""
+    part = t_mem(nr) + t_mem(ns)
+    return part + t_join_radix(nr, ns)
+
+
+def t_rrj(nr, ns, net: str = "rdma"):
+    """RRJ (§5.2): network partition fused with the radix pass;
+    T = 2 c_mem (wR+wS) (assuming c_net ~ c_mem and one pass)."""
+    return 2 * (t_mem(nr) + t_mem(ns))
+
+
+# ------------------------------------------------------------- OLTP §4 ----
+
+@dataclass(frozen=True)
+class OltpModel:
+    cores_per_node: int = 8
+    ghz: float = 2.2
+    record_bytes: int = 1024
+    records_per_txn: int = 3
+
+    def trx_upper_bound_cpu(self, n_servers: int, net: str,
+                            cycles_per_msg: float = None) -> float:
+        """§4.1.3: trx_u = (c * cycles_c * (n+1)) / ((5+8n) * cycles_m)."""
+        cm = cycles_per_msg or CYCLES_PER_MSG[net]
+        cyc = self.cores_per_node * self.ghz * 1e9
+        msgs = 5 + 8 * n_servers
+        return cyc * (n_servers + 1) / (msgs * cm)
+
+    def trx_upper_bound_bw(self, net: str, ports: int = 1) -> float:
+        """Bandwidth cap at the bottleneck machine (paper §4.3): each txn
+        reads AND writes records_per_txn * record_bytes, so the dual-port
+        aggregate divides by 2x the per-txn bytes."""
+        bw = 1 / C_NET[net] * ports
+        return bw / (2 * self.records_per_txn * self.record_bytes)
+
+    def rsi_bound(self, n_servers: int = 3, ports: int = 2) -> float:
+        """RSI is RNIC/bandwidth-bound (server CPUs idle): the paper's
+        ~2.4M txn/s cap for 1KB x 3 records on dual-port FDR."""
+        return self.trx_upper_bound_bw("rdma", ports)
+
+
+# ------------------------------------------------------- TPU roofline -----
+
+@dataclass(frozen=True)
+class TpuSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12       # per chip
+    hbm_bw: float = 819e9                 # B/s per chip
+    ici_link_bw: float = 50e9             # B/s per link (one direction)
+    hbm_bytes: int = 16 * 2 ** 30
+
+
+TPU = TpuSpec()
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+                   collective_bytes_per_chip: float, spec: TpuSpec = TPU):
+    """Three-term roofline (seconds per step, per chip)."""
+    t_c = flops_per_chip / spec.peak_flops_bf16
+    t_m = hbm_bytes_per_chip / spec.hbm_bw
+    t_n = collective_bytes_per_chip / spec.ici_link_bw
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+def model_flops(n_active_params: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6 * N_active * D (train); 2 * N * D (inference fwd)."""
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_fwd(n_active_params: float, tokens: float) -> float:
+    return 2.0 * n_active_params * tokens

@@ -1,0 +1,118 @@
+"""Network-Attached Memory pool (§3.1.4).
+
+A NamPool is a registry of named *regions* — logically global arrays that live
+sharded across the mesh (storage side) and are accessed by compute through
+one-sided-style operations:
+
+  read(idx)        — RDMA READ:   row gather (cross-shard under GSPMD)
+  write(idx, v)    — RDMA WRITE:  row scatter
+  cas(idx, exp, new) — RDMA CAS:  vectorized compare-and-swap with
+                     deterministic arbitration (home-shard semantics: among
+                     concurrent CASes to one word, exactly the
+                     highest-priority matching request wins)
+
+Storage nodes are "dumb" (no region-specific logic); all protocol logic (RSI,
+joins) lives client-side in ``repro.core.rsi`` / ``repro.core.shuffle``.
+Compute/storage co-location is just a sharding choice, per the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Region:
+    name: str
+    shape: tuple
+    dtype: object
+    logical_axes: tuple
+
+
+@dataclass
+class NamPool:
+    regions: dict = field(default_factory=dict)
+
+    def alloc(self, name: str, shape, dtype, logical_axes=None) -> Region:
+        if name in self.regions:
+            raise KeyError(f"region {name!r} exists")
+        la = tuple(logical_axes) if logical_axes else (None,) * len(shape)
+        r = Region(name, tuple(shape), dtype, la)
+        self.regions[name] = r
+        return r
+
+    def zeros(self) -> dict:
+        return {n: jnp.zeros(r.shape, r.dtype)
+                for n, r in self.regions.items()}
+
+    def specs(self) -> dict:
+        return {n: jax.ShapeDtypeStruct(r.shape, r.dtype)
+                for n, r in self.regions.items()}
+
+    def shardings(self, policy) -> dict:
+        return {n: policy.sharding(r.logical_axes)
+                for n, r in self.regions.items()}
+
+
+# ------------------------------------------------ one-sided style ops -----
+
+def read(region_arr, idx):
+    """One-sided READ of rows `idx`. OOB (negative) -> zeros."""
+    safe = jnp.maximum(idx, 0)
+    out = jnp.take(region_arr, safe, axis=0)
+    mask = (idx >= 0)
+    return out * mask.reshape(mask.shape + (1,) * (out.ndim - mask.ndim)
+                              ).astype(out.dtype)
+
+
+def write(region_arr, idx, values):
+    """One-sided WRITE of rows; negative idx dropped."""
+    return region_arr.at[jnp.where(idx >= 0, idx, region_arr.shape[0])].set(
+        values, mode="drop")
+
+
+def cas(words, idx, expected, new, priority=None):
+    """Vectorized multi-request compare-and-swap with deterministic
+    arbitration (the TPU adaptation of the RNIC's atomic CAS).
+
+    words: (R,) uint64 — lock|CID words.
+    idx/expected/new: (A,) requests; idx may repeat (conflicts).
+    priority: (A,) int32 — lower wins ties (default: request order).
+    Returns (success (A,) bool, new_words (R,)).
+
+    Semantics = sequential execution in priority order: the first matching
+    request per word succeeds and installs `new`; later requests compare
+    against the installed value (and fail unless they'd match it — for lock
+    words `new` always has the lock bit set, so same-CID losers fail too).
+    """
+    A = idx.shape[0]
+    if priority is None:
+        priority = jnp.arange(A, dtype=jnp.int32)
+    order = jnp.argsort(priority, stable=True)
+    idx_s, exp_s, new_s, = idx[order], expected[order], new[order]
+    cur = words[jnp.maximum(idx_s, 0)]
+    # Among requests whose `expected` matches the stored word, the first in
+    # priority order wins. One pass suffices for lock-word CAS because a
+    # winning CAS sets the lock bit, which never equals any request's
+    # `expected` (expected values are unlocked words) — so all later
+    # requests to that word fail regardless.
+    match = (cur == exp_s) & (idx_s >= 0)
+    cand = jnp.where(match, idx_s, -1)
+    ok_s = _is_first_occurrence(cand) & match
+    new_words = words.at[jnp.where(ok_s, idx_s, words.shape[0])].set(
+        new_s, mode="drop")
+    ok = jnp.zeros((A,), bool).at[order].set(ok_s)
+    return ok, new_words
+
+
+def _is_first_occurrence(x):
+    """x sorted by priority; True where this index value appears first.
+    Works for unsorted value arrays via argsort rank trick."""
+    order = jnp.argsort(x, stable=True)
+    xs = x[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), xs[1:] != xs[:-1]])
+    return jnp.zeros_like(first_sorted).at[order].set(first_sorted)

@@ -1,0 +1,264 @@
+"""RSI — RDMA-based Snapshot Isolation (paper §4.2), NAM-adapted to TPU.
+
+Store layout (paper Table 1): per record a 64-bit word = 1-bit lock | 63-bit
+CID, followed by n version slots (newest first). The client (= compute node)
+drives commit entirely with one-sided ops:
+
+  msg 1: get CID from the client-partitioned timestamp bitvector (local slot)
+  msg 2: validate+lock every write with a single CAS   (1 round trip)
+  msg 3: install versions with WRITEs, release locks; flip the bitvector bit
+         (unsignaled)
+
+Abort path: losers release any locks they won (restore the old word).
+
+The JAX implementation commits a *batch* of concurrent transactions with
+deterministic CAS arbitration (see ``repro.core.nam.cas``) — semantically a
+serial schedule in priority order, which is what per-record atomic CAS gives
+the paper. ``commit_sharded`` routes prepare requests to home shards with the
+radix shuffle + all_to_all (1 round trip, like the RNIC CAS).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nam
+
+# JAX runs with x64 disabled, so the paper's 1+63-bit word is realized
+# as 1-bit lock | 31-bit CID in uint32 (layout generalizes; the Pallas
+# cas_lock kernel uses the same u32 word).
+WORD = jnp.uint32
+LOCK_BIT = jnp.uint32(1 << 31)
+CID_MASK = ~LOCK_BIT
+
+
+@dataclass(frozen=True)
+class StoreCfg:
+    num_records: int
+    payload_words: int = 4        # m-bit record as u64 words
+    version_slots: int = 1        # paper's current impl: n = 1
+    num_timestamps: int = 60_000  # paper's bitvector size
+
+
+def init_store(cfg: StoreCfg):
+    """words[r] = lock|CID; payload (R, slots, m); cids (R, slots)."""
+    return {
+        "words": jnp.zeros((cfg.num_records,), WORD),
+        "payload": jnp.zeros((cfg.num_records, cfg.version_slots,
+                              cfg.payload_words), WORD),
+        "cids": jnp.zeros((cfg.num_records, cfg.version_slots), WORD),
+        "bitvec": jnp.zeros((cfg.num_timestamps,), bool),
+    }
+
+
+def highest_committed(bitvec) -> jnp.ndarray:
+    """Highest consecutive set bit (paper's read-timestamp rule)."""
+    consec = jnp.cumprod(bitvec.astype(jnp.int32))
+    return jnp.sum(consec).astype(WORD)  # count of leading ones
+
+
+@dataclass(frozen=True)
+class TxnBatch:
+    """W fixed write slots per txn (record -1 = unused).
+
+    write_recs: (T, W) int32; read_cids: (T, W) uint32 (word) — the RID under which
+    each record was read; new_payload: (T, W, m) uint32 (word); cid: (T,) uint32 (word)
+    pre-assigned commit timestamps (bitvector slots).
+    """
+    write_recs: jnp.ndarray
+    read_cids: jnp.ndarray
+    new_payload: jnp.ndarray
+    cid: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    TxnBatch, data_fields=["write_recs", "read_cids", "new_payload", "cid"],
+    meta_fields=[])
+
+
+def commit(store, txns: TxnBatch, priority=None):
+    """Commit a batch of concurrent transactions. Returns
+    (committed (T,) bool, new_store)."""
+    T, W = txns.write_recs.shape
+    recs = txns.write_recs.reshape(-1)
+    exp = (txns.read_cids & CID_MASK).reshape(-1)
+    new_word = LOCK_BIT | exp                     # lock, keep old CID
+    if priority is None:
+        priority = jnp.arange(T, dtype=jnp.int32)
+    prio_flat = jnp.repeat(priority, W)
+
+    # ---- phase 1: validate + lock (single CAS per record) [msg 2]
+    ok, words_locked = nam.cas(store["words"], recs, exp, new_word,
+                               priority=prio_flat)
+    ok = ok.reshape(T, W)
+    used = txns.write_recs >= 0
+    txn_ok = jnp.all(ok | ~used, axis=1) & jnp.any(used, axis=1)
+
+    # ---- phase 2: install new versions + unlock [msg 3]; losers release
+    ok_flat = (ok & used).reshape(-1)
+    commit_flat = jnp.repeat(txn_ok, W) & ok_flat
+    release_flat = ok_flat & ~commit_flat
+    # committed: word = new CID (unlocked)
+    cid_flat = jnp.repeat(txns.cid & CID_MASK, W)
+    idx_commit = jnp.where(commit_flat, recs, -1)
+    words = nam.write(words_locked, idx_commit, cid_flat)
+    # released: restore old (unlocked) word
+    idx_rel = jnp.where(release_flat, recs, -1)
+    words = nam.write(words, idx_rel, exp)
+
+    # version install: shift slots left, newest at 0.
+    # NB: negative indices WRAP in jnp scatters — use an explicit OOB
+    # sentinel (row N) so mode="drop" actually drops skipped writes.
+    pay = store["payload"]
+    cids = store["cids"]
+    oob = pay.shape[0]
+    idx_pay = jnp.where(commit_flat, recs, oob)
+    if pay.shape[1] > 1:
+        shifted_pay = jnp.concatenate([pay[:, :1], pay[:, :-1]], axis=1)
+        shifted_cid = jnp.concatenate([cids[:, :1], cids[:, :-1]], axis=1)
+        has_commit = jnp.zeros((pay.shape[0],), bool).at[idx_pay].set(
+            True, mode="drop")
+        pay = jnp.where(has_commit[:, None, None], shifted_pay, pay)
+        cids = jnp.where(has_commit[:, None], shifted_cid, cids)
+    pay = pay.at[idx_pay, 0].set(txns.new_payload.reshape(T * W, -1),
+                                 mode="drop")
+    cids = cids.at[idx_pay, 0].set(cid_flat, mode="drop")
+
+    # ---- timestamp bitvector [msg 3, unsignaled]: aborted txns also burn
+    # their slot (the paper's wrap/skip bookkeeping).
+    bitvec = store["bitvec"].at[txns.cid.astype(jnp.int32)].set(True,
+                                                                mode="drop")
+    return txn_ok, {"words": words, "payload": pay, "cids": cids,
+                    "bitvec": bitvec}
+
+
+def read_snapshot(store, recs, rid):
+    """Read records at snapshot `rid`: newest version with CID <= rid.
+    Returns (payload (..., m), cid, ok — False if no visible version)."""
+    cids = store["cids"][recs]                     # (..., slots)
+    vis = (cids <= rid) & (cids > 0)
+    slot = jnp.argmax(vis, axis=-1)
+    ok = jnp.any(vis, axis=-1)
+    pay = jnp.take_along_axis(
+        store["payload"][recs], slot[..., None, None], axis=-2)[..., 0, :]
+    cid = jnp.take_along_axis(cids, slot[..., None], axis=-1)[..., 0]
+    return pay, cid, ok
+
+
+# ----------------------------------------------------------- sharded ------
+
+def commit_sharded(mesh, axis: str, store, txns: TxnBatch):
+    """NAM deployment: records live on their home shard
+    (record r -> shard r % n); clients (one batch per shard) route prepare
+    requests with one all_to_all (= the CAS round trip), home shards
+    arbitrate locally, grants return with the paired all_to_all.
+
+    store leaves are sharded on axis 0 by home shard; txns are sharded on
+    axis 0 (each shard's clients). Runs under shard_map.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    n = mesh.shape[axis]
+
+    def body(words, payload, cids, bitvec, wrecs, rcids, npay, cid):
+        T, W = wrecs.shape
+        me = jax.lax.axis_index(axis)
+        r_local = words.shape[0]       # records per home shard (contiguous)
+        bv_local = bitvec.shape[0]
+        # ---- route requests to home shards (radix by rec // r_local)
+        dest = jnp.where(wrecs >= 0, wrecs // r_local, n)
+        flat_dest = dest.reshape(-1)
+        cap = T * W  # worst case: all my writes hit one shard
+        gid = (jnp.repeat(jnp.arange(T, dtype=jnp.int32), W) + me * T)
+        payload_req = {
+            "rec": wrecs.reshape(-1), "exp": (rcids & CID_MASK).reshape(-1),
+            "prio": gid, "slotid": jnp.arange(T * W, dtype=jnp.int32),
+            "cid": jnp.repeat(cid & CID_MASK, W),
+            "npay": npay.reshape(T * W, -1),
+        }
+        buf, meta, valid = _route(payload_req, flat_dest, n, cap)
+
+        def a2a(v):
+            return jax.lax.all_to_all(
+                v.reshape(n, cap, *v.shape[1:]), axis, 0, 0,
+                tiled=False).reshape(n * cap, *v.shape[1:])
+
+        r = {k: a2a(v) for k, v in meta.items()}
+        rvalid = a2a(valid)
+        # ---- local CAS arbitration on my records (global prio = fair)
+        lrec = jnp.where(rvalid > 0, r["rec"] % r_local, -1)  # local row
+        ok, words = nam.cas(words, lrec, r["exp"],
+                            LOCK_BIT | r["exp"], priority=r["prio"])
+        # ---- grants return to requesters
+        grant = a2a(ok.astype(jnp.int32))   # symmetric permutation returns
+        granted = jnp.zeros((T * W,), jnp.int32).at[meta_slot(meta)].add(
+            grant * (a2a(rvalid) > 0))
+        gmat = granted.reshape(T, W) > 0
+        used = wrecs >= 0
+        txn_ok = jnp.all(gmat | ~used, axis=1) & jnp.any(used, axis=1)
+        # ---- phase 2: installs routed the same way (write + unlock)
+        commit_req = jnp.repeat(txn_ok, W) & (granted > 0)
+        release_req = (granted > 0) & ~commit_req
+        inst = {"rec": payload_req["rec"],
+                "val": jnp.where(commit_req, payload_req["cid"],
+                                 payload_req["exp"]),
+                "npay": payload_req["npay"],
+                "do_pay": commit_req.astype(jnp.int32)}
+        act = commit_req | release_req
+        buf2, meta2, valid2 = _route(inst, jnp.where(act, flat_dest, n),
+                                     n, cap)
+        r2 = {k: a2a(v) for k, v in meta2.items()}
+        v2 = a2a(valid2)
+        lrec2 = jnp.where(v2 > 0, r2["rec"] % r_local, -1)
+        words = nam.write(words, lrec2, r2["val"])
+        pay_idx = jnp.where((r2["do_pay"] > 0) & (v2 > 0), lrec2, -1)
+        payload = payload.at[jnp.where(pay_idx >= 0, pay_idx,
+                                       payload.shape[0]), 0].set(
+            r2["npay"], mode="drop")
+        cids = cids.at[jnp.where(pay_idx >= 0, pay_idx, cids.shape[0]),
+                       0].set(r2["val"], mode="drop")
+        # clients flip their own (locally owned) timestamp bits: cids are
+        # pre-assigned in shard-contiguous ranges [me*bv_local, ...)
+        cbit = cid.astype(jnp.int32) - me * bv_local
+        cbit = jnp.where((cbit >= 0) & (cbit < bv_local), cbit, bv_local)
+        bitvec = bitvec.at[cbit].set(True, mode="drop")
+        return txn_ok, words, payload, cids, bitvec
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis),
+                  P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+        check_rep=False)
+    txn_ok, words, payload, cids, bitvec = f(
+        store["words"], store["payload"], store["cids"], store["bitvec"],
+        txns.write_recs, txns.read_cids, txns.new_payload, txns.cid)
+    return txn_ok, {"words": words, "payload": payload, "cids": cids,
+                    "bitvec": bitvec}
+
+
+def meta_slot(meta):
+    return meta["slotid"]
+
+
+def _route(fields: dict, dest, n: int, cap: int):
+    """Radix-partition request fields into (n, cap) fixed buffers
+    (software-managed buffers, paper §5.2). Returns (None, routed, valid)."""
+    A = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    ds = dest[order]
+    first = jnp.searchsorted(ds, ds, side="left")
+    pos = jnp.arange(A, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = (pos < cap) & (ds < n)
+    slot = jnp.where(keep, ds * cap + pos, n * cap)
+    routed = {}
+    for k, v in fields.items():
+        buf = jnp.zeros((n * cap + 1,) + v.shape[1:], v.dtype)
+        routed[k] = buf.at[slot].set(v[order], mode="drop")[:-1]
+    valid = jnp.zeros((n * cap + 1,), jnp.int32).at[slot].set(
+        keep.astype(jnp.int32), mode="drop")[:-1]
+    return None, routed, valid

@@ -1,0 +1,154 @@
+"""Distributed joins (paper §5.1–5.2): GHJ, GHJ+Bloom, RDMA-GHJ, RRJ.
+
+All four share the same local building blocks (radix partition + sort-probe
+join) so measured differences isolate the *shuffle strategy*, exactly like
+the paper's Fig 8(a). On a >1-shard mesh the shuffle is a real ``all_to_all``
+inside shard_map; the RDMA variants chunk the shuffle so XLA can overlap
+transfer with partitioning compute (selective signaling). The radix binning
+step is the jnp twin of ``repro.kernels.radix_partition``.
+
+Relations are (keys, values) u32/u32; R is the (unique-key) build side.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom as bloom_mod
+
+
+def radix_partition(keys, num_parts: int, *, bits_from: int = 0):
+    """Partition ids + stable order for a radix pass.
+    Returns (part_id (N,), order (N,), counts (P,))."""
+    part = ((keys >> bits_from) % jnp.uint32(num_parts)).astype(jnp.int32)
+    order = jnp.argsort(part, stable=True)
+    counts = jnp.zeros((num_parts,), jnp.int32).at[part].add(1)
+    return part, order, counts
+
+
+def local_join(rk, rv, sk, sv):
+    """Join unique-key build side R with probe side S.
+    Returns (matched mask (|S|,), r-values aligned to S (|S|,))."""
+    order = jnp.argsort(rk)
+    rks, rvs = rk[order], rv[order]
+    pos = jnp.searchsorted(rks, sk)
+    pos = jnp.clip(pos, 0, rks.shape[0] - 1)
+    hit = rks[pos] == sk
+    return hit, jnp.where(hit, rvs[pos], 0)
+
+
+def _cache_blocks(keys, vals, num_blocks):
+    """Radix pass 2: bin into cache-sized blocks (software-managed buffers)."""
+    part, order, _ = radix_partition(keys, num_blocks, bits_from=16)
+    return keys[order], vals[order]
+
+
+def join_agg(hit, rv, sv):
+    """Benchmark payload: sum of matched value products (forces the join)."""
+    return jnp.sum(jnp.where(hit, rv * sv, 0).astype(jnp.uint64))
+
+
+# -------------------------------------------------------- single-node -----
+
+def ghj_local(rk, rv, sk, sv, *, num_parts: int = 32,
+              use_bloom: bool = False, bloom_bits: int = 1 << 20):
+    """Grace hash join on one shard (partition -> per-partition join).
+    With use_bloom, S is pre-filtered by a Bloom filter on R's keys
+    (semi-join reduction; reduces shuffle volume, adds a scan + filter)."""
+    if use_bloom:
+        bits = bloom_mod.build(rk, bloom_bits)
+        keep = bloom_mod.query(bits, sk)
+        # fixed-shape filter: drop misses by pointing them at a sentinel key
+        sk = jnp.where(keep, sk, jnp.uint32(0xFFFFFFFF))
+    _, orderR, _ = radix_partition(rk, num_parts)
+    _, orderS, _ = radix_partition(sk, num_parts)
+    rk2, rv2 = _cache_blocks(rk[orderR], rv[orderR], num_parts)
+    sk2, sv2 = _cache_blocks(sk[orderS], sv[orderS], num_parts)
+    hit, rvals = local_join(rk2, rv2, sk2, sv2)
+    return join_agg(hit, rvals, sv2)
+
+
+def rrj_local(rk, rv, sk, sv, *, num_blocks: int = 64):
+    """RRJ collapses GHJ's network partition + radix pass into ONE radix pass
+    straight into cache-sized remote buffers (paper §5.2)."""
+    _, orderR, _ = radix_partition(rk, num_blocks)
+    _, orderS, _ = radix_partition(sk, num_blocks)
+    hit, rvals = local_join(rk[orderR], rv[orderR], sk[orderS], sv[orderS])
+    return join_agg(hit, rvals, sv[orderS])
+
+
+# --------------------------------------------------------- distributed ----
+
+def _shuffle_by_key(keys, vals, axis: str, n: int, cap: int, chunks: int = 1):
+    """all_to_all shuffle of (keys, vals) to owner shard key % n.
+    chunks > 1 pipelines the shuffle (selective-signaling overlap)."""
+    N = keys.shape[0]
+    dest = (keys % jnp.uint32(n)).astype(jnp.int32)
+    dest = jnp.where(keys == jnp.uint32(0xFFFFFFFF), n, dest)  # filtered
+    order = jnp.argsort(dest, stable=True)
+    ds, ks, vs = dest[order], keys[order], vals[order]
+    first = jnp.searchsorted(ds, ds, side="left")
+    pos = jnp.arange(N, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = (pos < cap) & (ds < n)
+    slot = jnp.where(keep, ds * cap + pos, n * cap)
+    kbuf = jnp.full((n * cap + 1,), 0xFFFFFFFF, jnp.uint32
+                    ).at[slot].set(ks, mode="drop")[:-1]
+    vbuf = jnp.zeros((n * cap + 1,), vals.dtype).at[slot].set(
+        vs, mode="drop")[:-1]
+
+    def a2a(v):
+        return jax.lax.all_to_all(v.reshape(n, cap // chunks * chunks,
+                                            *v.shape[1:]), axis, 0, 0,
+                                  tiled=False).reshape(-1, *v.shape[1:])
+
+    if chunks == 1:
+        return a2a(kbuf), a2a(vbuf)
+    # pipelined: scan over chunks so transfer c overlaps binning of c+1
+    kc = kbuf.reshape(n, chunks, cap // chunks)
+    vc = vbuf.reshape(n, chunks, cap // chunks)
+
+    def step(_, inp):
+        k, v = inp
+        return None, (jax.lax.all_to_all(k, axis, 0, 0, tiled=False),
+                      jax.lax.all_to_all(v, axis, 0, 0, tiled=False))
+
+    _, (ko, vo) = jax.lax.scan(step, None,
+                               (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    return (jnp.moveaxis(ko, 0, 1).reshape(-1), jnp.moveaxis(vo, 0, 1).reshape(-1))
+
+
+def make_distributed_join(mesh, axis: str, variant: str, *,
+                          num_parts: int = 32, bloom_bits: int = 1 << 20,
+                          capacity_factor: float = 2.0):
+    """variant in {ghj, ghj_bloom, rdma_ghj, rrj}. Returns f(rk, rv, sk, sv)
+    -> u64 join aggregate, where inputs are sharded on axis 0."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    n = mesh.shape[axis]
+
+    def body(rk, rv, sk, sv):
+        if variant == "ghj_bloom":
+            # build local bloom over R keys, combine across shards (OR), then
+            # filter S before shuffling (semi-join reduction §5.1.2)
+            bits = bloom_mod.build(rk, bloom_bits)
+            bits = jax.lax.psum(bits.astype(jnp.int32), axis) > 0
+            keep = bloom_mod.query(bits, sk)
+            sk = jnp.where(keep, sk, jnp.uint32(0xFFFFFFFF))
+        chunks = 4 if variant in ("rdma_ghj", "rrj") else 1
+        cap_r = int(rk.shape[0] * capacity_factor / n) // chunks * chunks
+        cap_s = int(sk.shape[0] * capacity_factor / n) // chunks * chunks
+        rk2, rv2 = _shuffle_by_key(rk, rv, axis, n, cap_r, chunks=chunks)
+        sk2, sv2 = _shuffle_by_key(sk, sv, axis, n, cap_s, chunks=chunks)
+        if variant == "rrj":
+            agg = rrj_local(rk2, rv2, sk2, sv2, num_blocks=num_parts)
+        else:
+            agg = ghj_local(rk2, rv2, sk2, sv2, num_parts=num_parts)
+        return jax.lax.psum(agg, axis)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                     out_specs=P(), check_rep=False)

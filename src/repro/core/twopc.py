@@ -1,0 +1,36 @@
+"""Traditional 2PC/SI baseline (paper §4.1, Fig 5a) — the system the paper
+argues against, implemented for comparison.
+
+Data-plane outcome is identical to RSI under the same priority order (2PC
+prepare = validate+lock at the RM; commit = install+unlock), so we reuse the
+same arbitration. What differs — and what Fig 6 measures — is the *message
+economics*: a TM-coordinated protocol with two-sided messages whose CPU and
+bandwidth costs come from the §2 microbenchmarks. ``message_counts`` is the
+paper's §4.1.3 model; the fig6 benchmark combines it with measured per-txn
+compute time to reproduce the scaling curves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import rsi
+
+
+def commit(store, txns, priority=None):
+    """2PC/SI commit of a txn batch via a TM: same schedule as RSI."""
+    return rsi.commit(store, txns, priority=priority)
+
+
+def message_counts(n_rm: int) -> dict:
+    """Per-transaction messages in the traditional protocol (§4.1.3):
+    m_r = 2 + 4n, m_s = 3 + 4n over TM+RMs; plus the client pair."""
+    return {"recv": 2 + 4 * n_rm, "send": 3 + 4 * n_rm,
+            "total": 5 + 8 * n_rm, "delays_visible": 6}
+
+
+def rsi_message_counts(n_writes: int = 3) -> dict:
+    """RSI (§4.2): CID fetch is local (pre-assigned bitvector slots); one CAS
+    round trip per record (parallel => 1 delay), one WRITE per record, one
+    unsignaled bitvector update. Server-side CPU messages: zero."""
+    return {"cas": n_writes, "write": n_writes, "unsignaled": 1,
+            "round_trips": 3, "server_cpu_msgs": 0}

@@ -1,0 +1,96 @@
+"""Decentralized work-queue load balancing (paper §3.2).
+
+The paper proposes a central work queue accessed with one-sided verbs so idle
+nodes pull small portions of work — decentralized, straggler-proof. Host-side
+twin for the data pipeline and the trainer's straggler mitigation: a sharded
+deque per worker with lock-protected steal-from-the-back semantics.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+@dataclass
+class StealStats:
+    local_pops: int = 0
+    steals: int = 0
+    failed_steals: int = 0
+
+
+class WorkQueue:
+    """Per-worker deques; owner pops from the front (cache-friendly),
+    thieves steal from the back (the one-sided READ+CAS analogue)."""
+
+    def __init__(self, num_workers: int):
+        self.num_workers = num_workers
+        self._qs = [collections.deque() for _ in range(num_workers)]
+        self._locks = [threading.Lock() for _ in range(num_workers)]
+        self.stats = [StealStats() for _ in range(num_workers)]
+
+    def push(self, worker: int, item: Any):
+        with self._locks[worker]:
+            self._qs[worker].append(item)
+
+    def push_many(self, worker: int, items):
+        with self._locks[worker]:
+            self._qs[worker].extend(items)
+
+    def pop(self, worker: int) -> Optional[Any]:
+        with self._locks[worker]:
+            if self._qs[worker]:
+                self.stats[worker].local_pops += 1
+                return self._qs[worker].popleft()
+        # idle: steal half from the longest victim's tail
+        victim = max(range(self.num_workers),
+                     key=lambda w: len(self._qs[w]))
+        if victim == worker:
+            return None
+        with self._locks[victim]:
+            q = self._qs[victim]
+            if not q:
+                self.stats[worker].failed_steals += 1
+                return None
+            take = max(1, len(q) // 2)
+            stolen = [q.pop() for _ in range(take)]
+        self.stats[worker].steals += 1
+        item, rest = stolen[0], stolen[1:]
+        if rest:
+            self.push_many(worker, rest)
+        return item
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._qs)
+
+
+def run_workers(queue: WorkQueue, fn, *, slow_worker: Optional[int] = None,
+                slow_factor: float = 5.0):
+    """Drain the queue with one thread per worker; optionally handicap one
+    worker to simulate a straggler. Returns per-worker completed items."""
+    done = [[] for _ in range(queue.num_workers)]
+
+    def loop(w):
+        while True:
+            item = queue.pop(w)
+            if item is None:
+                if queue.pending() == 0:
+                    return
+                time.sleep(0.0005)
+                continue
+            t0 = time.perf_counter()
+            fn(item)
+            if slow_worker == w:
+                time.sleep((time.perf_counter() - t0) * (slow_factor - 1)
+                           + 1e-4)
+            done[w].append(item)
+
+    threads = [threading.Thread(target=loop, args=(w,))
+               for w in range(queue.num_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return done

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, Prefetcher
+
+__all__ = ["SyntheticLM", "Prefetcher"]

@@ -1,0 +1,110 @@
+"""Deterministic, resumable, work-stealing data pipeline.
+
+Synthetic LM token stream (counter-based hashing: batch content is a pure
+function of (seed, step, row) => exact resume from any step, and any loader
+worker can produce any shard — which is what makes work-stealing safe). The
+work queue mirrors the paper's §3.2 decentralized load balancing: shards of
+a step's batch are work items; a straggling loader's items get stolen.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.workqueue import WorkQueue
+
+
+def _hash2d(step: int, rows, cols, seed: int, mod: int):
+    """splitmix-ish counter hash -> int32 [0, mod)."""
+    x = (np.uint64(step + 1) * np.uint64(0x9E3779B97F4A7C15)
+         + rows[:, None].astype(np.uint64) * np.uint64(0xBF58476D1CE4E5B9)
+         + cols[None, :].astype(np.uint64) * np.uint64(0x94D049BB133111EB)
+         + np.uint64(seed) * np.uint64(0xD6E8FEB86659FD93))
+    x ^= x >> np.uint64(31)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(27)
+    return (x % np.uint64(mod)).astype(np.int32)
+
+
+@dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    num_workers: int = 4
+    modality: tuple = None     # (num_tokens, dim) stub frontend features
+    step: int = 0              # resumable cursor
+
+    def state_dict(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, st):
+        self.step = int(st["step"])
+        self.seed = int(st["seed"])
+
+    def _shard(self, step: int, row0: int, rows: int):
+        r = np.arange(row0, row0 + rows)
+        c = np.arange(self.seq_len + 1)
+        toks = _hash2d(step, r, c, self.seed, self.vocab_size)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.modality:
+            m, d = self.modality
+            out["modality"] = (_hash2d(step, r, np.arange(m * d), self.seed + 1,
+                                       1000).reshape(rows, m, d)
+                               .astype(np.float32) / 1000.0)
+        return out
+
+    def next_batch(self, *, slow_worker=None):
+        """Producers build the batch shard-by-shard through the work queue
+        (steal-balanced), then shards are assembled in deterministic order."""
+        step = self.step
+        self.step += 1
+        shards = max(min(self.num_workers * 2, self.global_batch), 1)
+        while self.global_batch % shards:
+            shards -= 1
+        rows = self.global_batch // shards
+        wq = WorkQueue(self.num_workers)
+        for i in range(shards):
+            wq.push(i % self.num_workers, i)
+        results = {}
+        lock = threading.Lock()
+
+        def work(i):
+            shard = self._shard(step, i * rows, rows)
+            with lock:
+                results[i] = shard
+
+        from repro.core.workqueue import run_workers
+        run_workers(wq, work, slow_worker=slow_worker)
+        parts = [results[i] for i in range(shards)]
+        return {k: np.concatenate([p[k] for p in parts], axis=0)
+                for k in parts[0]}
+
+
+class Prefetcher:
+    """Background prefetch (depth-N) — the storage-manager prefetching idea
+    of §3.2 applied to the input pipeline."""
+
+    def __init__(self, it_fn, depth: int = 2):
+        self._q = queue.Queue(maxsize=depth)
+        self._stop = False
+
+        def loop():
+            while not self._stop:
+                try:
+                    self._q.put(it_fn(), timeout=1)
+                except queue.Full:
+                    continue
+
+        self._t = threading.Thread(target=loop, daemon=True)
+        self._t.start()
+
+    def next(self, timeout=30):
+        return self._q.get(timeout=timeout)
+
+    def close(self):
+        self._stop = True

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+a jit'd wrapper in ops.py, and a pure-jnp oracle in ref.py. On this CPU
+container they are validated with interpret=True; on TPU the wrappers set
+interpret=False and the same BlockSpecs drive Mosaic.
+
+  radix_partition — the paper's RRJ software-managed-buffer partitioner
+                    (used by MoE dispatch + shuffle joins)
+  flash_attention — blockwise causal GQA attention (prefill hot-spot)
+  ssd_scan        — Mamba2 SSD chunk scan (jamba/mamba2 hot-spot)
+  grouped_agg     — RDMA-AGG pre-aggregation (one-hot-matmul scatter-add)
+  cas_lock        — RSI validate+lock word arbitration (home-shard CAS)
+"""

@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret=None`` auto-selects: False on TPU backends (Mosaic), True
+elsewhere (CPU validation — kernel body executed in Python)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import (cas_lock as _cas, flash_attention as _fa,
+                           grouped_agg as _ga, radix_partition as _rp,
+                           ssd_scan as _ssd)
+
+
+def _interp(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("num_buckets", "cap", "block_n",
+                                   "interpret"))
+def radix_partition(vals, bucket, num_buckets, cap, block_n=256,
+                    interpret=None):
+    return _rp.radix_partition(vals, bucket, num_buckets, cap,
+                               block_n=block_n, interpret=_interp(interpret))
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                    interpret=None):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interp(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "head_block", "interpret"))
+def ssd_scan(xh, bv, cv, dt, a, chunk=128, head_block=8, interpret=None):
+    return _ssd.ssd_scan(xh, bv, cv, dt, a, chunk=chunk,
+                         head_block=head_block, interpret=_interp(interpret))
+
+
+@partial(jax.jit, static_argnames=("num_slots", "block_n", "interpret"))
+def grouped_agg(slot, vals, num_slots, block_n=512, interpret=None):
+    return _ga.grouped_agg(slot, vals, num_slots, block_n=block_n,
+                           interpret=_interp(interpret))
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def cas_lock(words, idx, expected, block_n=256, interpret=None):
+    return _cas.cas_lock(words, idx, expected, block_n=block_n,
+                         interpret=_interp(interpret))

@@ -1,0 +1,76 @@
+"""Radix partitioner with software-managed buffers (paper §5.2, RRJ).
+
+Scatters rows of `vals` into per-bucket fixed-capacity buffers. Grid is
+(bucket, token-block): the bucket axis is parallel; the token-block axis is
+sequential ("arbitrary") so a per-bucket running count in SMEM carries across
+blocks — the kernel-level twin of the remote buffer reservation + append
+pattern the paper uses for RDMA WRITEs.
+
+VMEM: one (cap, D) bucket buffer + one (BN, D) input tile resident per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bucket_ref, vals_ref, out_ref, count_ref, cnt_sm, *, cap, bn):
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        cnt_sm[0] = 0
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    b = bucket_ref[...]                     # (BN,)
+    v = vals_ref[...]                       # (BN, D)
+    mask = (b == p)
+    start = cnt_sm[0]
+
+    def body(i, cnt):
+        @pl.when(mask[i] & (cnt < cap))
+        def _():
+            row = jax.lax.dynamic_slice_in_dim(v, i, 1, axis=0)
+            out_ref[0, pl.ds(cnt, 1), :] = row
+        return cnt + jnp.where(mask[i], 1, 0)
+
+    cnt = jax.lax.fori_loop(0, bn, body, start)
+    cnt_sm[0] = cnt
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        count_ref[0] = jnp.minimum(cnt, cap)
+
+
+def radix_partition(vals, bucket, num_buckets: int, cap: int,
+                    *, block_n: int = 256, interpret: bool = True):
+    """vals: (N, D); bucket: (N,) int32 in [0, num_buckets).
+    Returns (out (num_buckets, cap, D), counts (num_buckets,))."""
+    n, d = vals.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (num_buckets, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, cap=cap, bn=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda p, j: (j,)),
+            pl.BlockSpec((block_n, d), lambda p, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cap, d), lambda p, j: (p, 0, 0)),
+            pl.BlockSpec((1,), lambda p, j: (p,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_buckets, cap, d), vals.dtype),
+            jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(bucket, vals)

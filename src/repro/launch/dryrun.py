@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks device count on first init.
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (get_config, ARCH_IDS, SHAPES,   # noqa: E402
+                           supports_shape)
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.models import api                                # noqa: E402
+from repro.sharding import make_policy, set_policy          # noqa: E402
+from repro.train import train_step as ts                    # noqa: E402
+from repro.train.optimizer import make_optimizer            # noqa: E402
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (public
+    helper used by tests; decode state specs are built under the policy in
+    ``lower_cell``)."""
+    cfg = get_config(arch)
+    return api.input_spec_shapes(cfg, SHAPES[shape_name])
+
+
+def _policy_kind(shape) -> str:
+    if shape.kind == "decode":
+        return "long_decode" if shape.name == "long_500k" else "decode"
+    return "train"
+
+
+# gradient-accumulation default: big archs split the per-device batch
+MICROBATCHES = {"jamba-1.5-large-398b": 4, "llama4-maverick-400b-a17b": 4,
+                "deepseek-v2-236b": 4, "llama-3.2-vision-90b": 4}
+
+
+def apply_opts(opts: str):
+    """Enable §Perf toggles: 'rs_outputs,ce_chunk=512,microbatches=2'."""
+    from repro.models import blocks, lm
+    out = {}
+    for item in (opts or "").split(","):
+        if not item:
+            continue
+        k, _, v = item.partition("=")
+        if k == "rs_outputs":
+            blocks.RS_OUTPUTS = True
+        elif k == "ce_chunk":
+            lm.CE_CHUNK = int(v or 512)
+        elif k == "decode_tp":
+            from repro.sharding import policy as _pol
+            _pol.DECODE_TP = True
+        elif k == "microbatches":
+            out["microbatches"] = int(v)
+        else:
+            raise ValueError(k)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, verbose=True,
+               microbatches=None):
+    """Lower + compile one (arch x shape) cell on `mesh`. Returns stats."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    if microbatches is None:
+        microbatches = MICROBATCHES.get(arch, 1)
+    policy = make_policy(mesh, shape_kind=_policy_kind(shape))
+    t0 = time.time()
+    with mesh, set_policy(policy):
+        pshapes = jax.eval_shape(
+            lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+        if shape.kind != "train":
+            # serving deploys bf16 weights (master f32 stays in the trainer)
+            pshapes = jax.tree.map(
+                lambda sd: jax.ShapeDtypeStruct(sd.shape, jnp.bfloat16)
+                if sd.dtype == jnp.float32 else sd, pshapes)
+        pshard = ts.param_shardings(cfg, policy)
+        batch = api.input_spec_shapes(cfg, shape)
+        bshard = ts.batch_shardings(cfg, policy, batch)
+
+        if shape.kind == "train":
+            opt = make_optimizer(cfg.optimizer)
+            oshapes = jax.eval_shape(opt.init, pshapes)
+            oshard = ts.opt_state_shardings(cfg, policy, opt)
+            step = ts.build_train_step(cfg, opt, microbatches=microbatches)
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, bshard),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(pshapes, oshapes, batch)
+        elif shape.kind == "prefill":
+            step = ts.build_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                             out_shardings=None)
+            lowered = jitted.lower(pshapes, batch)
+        else:  # decode
+            sshapes = api.decode_cache_shape(cfg, shape.global_batch,
+                                             shape.seq_len)
+            sshard = ts.decode_state_shardings(cfg, policy, sshapes)
+            tokshape = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tokshard = policy.sharding(("batch", None))
+            step = ts.build_serve_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, sshard, tokshard),
+                             out_shardings=(tokshard, sshard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(pshapes, sshapes, tokshape)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    stats = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_analysis": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed")} if cost else {},
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {stats['mesh']}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {stats['memory']}")
+        print(f"  cost_analysis:   {stats['cost_analysis']}")
+    return stats, lowered, compiled
+
+
+def run_cell(arch, shape_name, multi_pod, *, roofline=True, hlo_dir=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    out = lower_cell(arch, shape_name, mesh)
+    if isinstance(out, dict):   # skipped
+        print(f"[dryrun] SKIP {arch} x {shape_name}: {out['skipped']}")
+        return out
+    stats, lowered, compiled = out
+    if roofline:
+        import math
+        from repro.launch.roofline import analyze
+        cfg = get_config(arch)
+        stats["roofline"] = analyze(cfg, SHAPES[shape_name], compiled,
+                                    n_chips=math.prod(mesh.devices.shape))
+        r = dict(stats["roofline"])
+        r.pop("memory_breakdown", None)
+        print(f"  roofline: {json.dumps(r)}")
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+        with open(os.path.join(hlo_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(compiled.as_text())
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--out", default=None, help="append results to this JSONL")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--opts", default="",
+                    help="perf toggles: rs_outputs,ce_chunk=512,"
+                         "microbatches=N")
+    args = ap.parse_args()
+    opt_kw = apply_opts(args.opts)
+    if opt_kw.get("microbatches"):
+        MICROBATCHES.clear()
+        for a in ARCH_IDS:
+            MICROBATCHES[a] = opt_kw["microbatches"]
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    stats = run_cell(arch, shape, mp,
+                                     roofline=not args.no_roofline,
+                                     hlo_dir=args.hlo_dir)
+                    if args.opts and "skipped" not in stats:
+                        stats["opts"] = args.opts
+                except Exception as e:   # noqa: BLE001
+                    import traceback
+                    traceback.print_exc()
+                    stats = {"arch": arch, "shape": shape, "multi_pod": mp,
+                             "error": f"{type(e).__name__}: {e}"}
+                    failures.append(stats)
+                stats["multi_pod"] = mp
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(stats) + "\n")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES")
+        sys.exit(1)
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

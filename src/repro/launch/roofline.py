@@ -1,0 +1,323 @@
+"""Roofline extraction from the compiled (SPMD-partitioned) HLO.
+
+XLA's HloCostAnalysis visits each while body ONCE (verified empirically), so
+both FLOPs and bytes must be scaled by loop trip counts. The optimized HLO
+conveniently carries exact ``backend_config known_trip_count`` on every while
+op, and all shapes are already per-device, so:
+
+  - walk the call graph from ENTRY, accumulating a trip-count multiplier
+    (nested loops multiply);
+  - FLOPs: 2*M*N*K per `dot` (operand shapes resolved via a symbol table);
+  - HBM bytes: sum of operand+output bytes of top-level compute ops
+    (fusions stream operands once — the standard approximation);
+  - collective bytes per device: ring-model cost per op kind, with
+    participant count n parsed from replica_groups.
+
+CPU-backend caveat (documented in EXPERIMENTS.md): XLA-CPU wraps bf16 dots
+in f32 converts, which makes weight all-gathers appear as f32. The
+"adjusted" numbers halve f32 collectives/dots that feed dot_generals (they
+are bf16 on TPU); raw numbers are reported alongside.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+from repro.core import costmodel
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALL_ATTRS = ("to_apply=", "calls=", "condition=", "body=")
+
+
+def _shape_bytes(type_str):
+    """'f32[16,256,6144]{...}' -> (bytes, dtype, dims). Tuples: sum parts."""
+    total = 0
+    first = None
+    for m in _SHAPE_RE.finditer(type_str.split(")")[0]):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+        if first is None:
+            first = (dt, tuple(int(d) for d in dims.split(",") if d))
+    return total, first
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations = {}        # name -> [instruction lines]
+        self.shapes = {}              # instr name -> type string
+        self.entry = None
+        self._parse(text)
+
+    def _parse(self, text):
+        cur = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            # computation definitions start at column 0 and end with '{'
+            if (not line[:1].isspace()) and line.rstrip().endswith("{") \
+                    and ("->" in line or "ENTRY" in line):
+                m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+                if m:
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                    # parameter declarations carry shapes in the signature
+                    for pm in re.finditer(r"([\w.\-]+):\s*(\w+\[[\d,]*\])",
+                                          line):
+                        self.shapes[pm.group(1)] = pm.group(2)
+                    continue
+            if stripped == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            im = _INSTR_RE.match(line)
+            if im:
+                name, rest = im.group(1), im.group(2)
+                self.computations[cur].append((name, rest))
+                self.shapes[name] = rest.split("=")[0] if "=" not in rest \
+                    else rest
+                self.shapes[name] = rest  # type prefix parsed lazily
+
+    # ------------------------------------------------------- multipliers --
+
+    def multipliers(self):
+        """computation name -> execution multiplier from ENTRY. Also records
+        self.control: computations reached via control flow (entry + while
+        bodies/conditions) whose instructions touch HBM — fusion internals
+        (reached via calls=/to_apply=) stay in registers/VMEM."""
+        mult = defaultdict(float)
+        self.control = set()
+        if self.entry is None:
+            return mult
+        seen = set()
+
+        def visit(comp, m, control):
+            mult[comp] += m
+            if control:
+                self.control.add(comp)
+            if (comp, m) in seen or len(seen) > 100000:
+                return
+            seen.add((comp, m))
+            for name, rest in self.computations.get(comp, []):
+                trip = 1.0
+                if " while(" in rest:
+                    tm = re.search(r'known_trip_count\D+(\d+)', rest)
+                    trip = float(tm.group(1)) if tm else 1.0
+                for attr in _CALL_ATTRS:
+                    for cm in re.finditer(
+                            attr.replace("=", r"=%") + r"([\w.\-]+)", rest):
+                        callee = cm.group(1)
+                        if callee in self.computations:
+                            ctl = attr in ("condition=", "body=")
+                            visit(callee, m * (trip if ctl else 1.0), ctl)
+
+        visit(self.entry, 1.0, True)
+        return mult
+
+    # ------------------------------------------------------------ costs --
+
+    def _out_bytes(self, rest):
+        return _shape_bytes(rest)[0]
+
+    def _operand_names(self, rest):
+        call = rest.split("(", 1)
+        if len(call) < 2:
+            return []
+        args = call[1].split(")")[0]
+        return re.findall(r"%([\w.\-]+)", args)
+
+    def flops(self, adjusted=True):
+        """Loop-aware dot FLOPs (elementwise ignored — <1% for LMs)."""
+        mult = self.multipliers()
+        total = 0.0
+        for comp, instrs in self.computations.items():
+            m = mult.get(comp, 0.0)
+            if m == 0:
+                continue
+            for name, rest in instrs:
+                mm = re.search(r"\bdot\(", rest)
+                if not mm:
+                    continue
+                out_b, out_info = _shape_bytes(rest)
+                if out_info is None:
+                    continue
+                dt, out_dims = out_info
+                ops = self._operand_names(rest)
+                k = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                if cm and ops:
+                    lhs_type = self.shapes.get(ops[0], "")
+                    _, lhs_info = _shape_bytes(lhs_type)
+                    if lhs_info:
+                        for di in cm.group(1).split(","):
+                            if di and int(di) < len(lhs_info[1]):
+                                k *= lhs_info[1][int(di)]
+                nout = 1
+                for d in out_dims:
+                    nout *= d
+                total += m * 2.0 * nout * k
+        return total
+
+    def memory_bytes(self, exclude_re: str = None,
+                     exclude_lastdim: int = 0):
+        """Loop-aware HBM traffic: operands + outputs of instructions in
+        *control-flow* computations only (fusion internals are VMEM).
+        Slice-type ops read/write only the slice, not the full operand.
+
+        exclude_re: drop instructions whose op_name metadata matches — used
+        to estimate the memory term with attention-score/softmax chains kept
+        VMEM-resident (the Pallas flash/SSD kernels, which cannot be lowered
+        on the CPU backend)."""
+        exc = re.compile(exclude_re) if exclude_re else None
+        mult = self.multipliers()
+        skip = ("parameter(", "tuple(", "get-tuple-element(", "constant(",
+                "bitcast(", "after-all(", "while(", "conditional(",
+                "iota(", "partition-id(", "replica-id(")
+        out_only = ("dynamic-slice(", "gather(", "slice(", "broadcast(",
+                    "reshape(", "transpose(", "convert(", "copy(")
+        total = 0.0
+        for comp, instrs in self.computations.items():
+            m = mult.get(comp, 0.0)
+            if m == 0 or comp not in self.control:
+                continue
+            for name, rest in instrs:
+                if any(s in rest for s in skip):
+                    continue
+                if exc is not None:
+                    tm = re.search(r'op_name="([^"]*)"', rest)
+                    if tm and exc.search(tm.group(1)):
+                        continue
+                if exclude_lastdim:
+                    _, info = _shape_bytes(rest)
+                    if info and info[0] in ("f32", "bf16") \
+                            and len(info[1]) >= 4 \
+                            and info[1][-1] == exclude_lastdim:
+                        continue   # attention-score-shaped (.., c, T) tensor
+                b = self._out_bytes(rest)
+                if "dynamic-update-slice(" in rest:
+                    ops = self._operand_names(rest)
+                    upd = (_shape_bytes(self.shapes.get(ops[1], ""))[0]
+                           if len(ops) > 1 else 0)
+                    total += m * 2 * upd   # read+write the update window
+                    continue
+                if not any(s in rest for s in out_only):
+                    for op in self._operand_names(rest):
+                        b += _shape_bytes(self.shapes.get(op, ""))[0]
+                else:
+                    b *= 2                 # read slice + write output
+                total += m * b
+        return total
+
+    def memory_breakdown(self, top: int = 12):
+        """Attribute HBM traffic to source ops via metadata op_name (einsum
+        labels survive into HLO metadata) — drives the perf hillclimbs."""
+        mult = self.multipliers()
+        agg = defaultdict(float)
+        skip = ("parameter(", "tuple(", "get-tuple-element(", "constant(",
+                "bitcast(", "after-all(", "while(", "conditional(", "iota(")
+        for comp, instrs in self.computations.items():
+            m = mult.get(comp, 0.0)
+            if m == 0 or comp not in self.control:
+                continue
+            for name, rest in instrs:
+                if any(s in rest for s in skip):
+                    continue
+                b = self._out_bytes(rest)
+                tag = "unlabeled"
+                tm = re.search(r'op_name="([^"]*)"', rest)
+                if tm:
+                    tag = tm.group(1).split("/")[-1][:48]
+                agg[tag] += m * b
+        return sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+
+    def collective_bytes(self, adjusted=True):
+        """Per-device bytes over links, ring model, loop-aware.
+        Returns dict by kind + total."""
+        mult = self.multipliers()
+        kinds = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+                 "all-to-all": 0.0, "collective-permute": 0.0}
+        for comp, instrs in self.computations.items():
+            m = mult.get(comp, 0.0)
+            if m == 0:
+                continue
+            for name, rest in instrs:
+                km = re.match(r"[\w\[\],{}/ ]*\s*(all-gather|all-reduce|"
+                              r"reduce-scatter|all-to-all|collective-permute)"
+                              r"(?:-start)?\(", rest)
+                if not km:
+                    continue
+                kind = km.group(1)
+                b, info = _shape_bytes(rest)
+                gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+                n = int(gm.group(2)) if gm else 2
+                if adjusted and info and info[0] == "f32" \
+                        and "dot_general" in rest:
+                    b = b // 2  # CPU f32-for-bf16-dot artifact
+                if kind == "all-gather":
+                    cost = b * (n - 1) / n
+                elif kind == "all-reduce":
+                    cost = 2 * b * (n - 1) / n
+                elif kind == "reduce-scatter":
+                    cost = b * (n - 1)          # b is the scattered output
+                elif kind == "all-to-all":
+                    cost = b * (n - 1) / n
+                else:
+                    cost = b
+                kinds[kind] += m * cost
+        kinds["total"] = sum(kinds.values())
+        return kinds
+
+
+def analyze(cfg, shape, compiled, n_chips: int):
+    """Full three-term roofline for a compiled cell."""
+    txt = compiled.as_text()
+    mod = HloModule(txt)
+    flops = mod.flops()
+    mem = mod.memory_bytes()
+    coll = mod.collective_bytes()
+    terms = costmodel.roofline_terms(flops, mem, coll["total"])
+    # estimate with attention-score/softmax chains fused into VMEM (the
+    # Pallas flash_attention / ssd_scan kernels; Mosaic can't lower on CPU)
+    mem_k = mod.memory_bytes(
+        exclude_re=r"softmax|bkgct|bhst|->bij|bij,|bijh",
+        exclude_lastdim=(shape.seq_len if shape.kind != "decode" else 0))
+    terms_k = costmodel.roofline_terms(flops, mem_k, coll["total"])
+    n, n_active = cfg.param_counts()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = costmodel.model_flops(n_active, tokens)
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = costmodel.model_flops_fwd(n_active, tokens)
+    else:
+        mf = costmodel.model_flops_fwd(n_active, shape.global_batch)
+    mf_per_chip = mf / n_chips
+    out = {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": mem,
+        "collective_bytes_per_chip": coll,
+        **terms,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flop_ratio": mf_per_chip / max(flops, 1.0),
+        "roofline_fraction": (mf_per_chip / costmodel.TPU.peak_flops_bf16)
+                             / max(terms["bound_s"], 1e-12),
+        "memory_s_kernelized": terms_k["memory_s"],
+        "roofline_fraction_kernelized":
+            (mf_per_chip / costmodel.TPU.peak_flops_bf16)
+            / max(terms_k["bound_s"], 1e-12),
+        "memory_breakdown": mod.memory_breakdown(),
+    }
+    return out

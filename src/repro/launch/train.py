@@ -1,0 +1,48 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m \
+      --steps 50 --global-batch 8 --seq-len 256 [--smoke]
+
+--smoke uses the reduced same-family config (CPU-runnable); without it the
+full config is used (requires real accelerators / the production mesh).
+Checkpoint/restart: re-launching with the same --ckpt-dir resumes.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, reduce_config
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_config(cfg)
+    tcfg = TrainerConfig(steps=args.steps, global_batch=args.global_batch,
+                         seq_len=args.seq_len, microbatches=args.microbatches,
+                         checkpoint_dir=args.ckpt_dir,
+                         checkpoint_every=args.checkpoint_every)
+    tr = Trainer(cfg, tcfg)
+    resumed = tr.maybe_restore()
+    print(f"[train] arch={cfg.name} resumed={resumed} start_step={tr.step}")
+    log = tr.run()
+    for step, loss in log:
+        print(f"step {step:6d}  loss {loss:.4f}")
+    print(f"[train] done at step {tr.step}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models import lm, encdec
+from repro.models.api import (init_params, param_logical_axes, loss_fn,
+                              forward, init_decode_state, decode_step,
+                              input_spec_shapes)
+
+__all__ = ["lm", "encdec", "init_params", "param_logical_axes", "loss_fn",
+           "forward", "init_decode_state", "decode_step", "input_spec_shapes"]

@@ -1,0 +1,60 @@
+"""Family-dispatching model API + input specs for every (arch x shape) cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import encdec, lm
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else lm
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    return _mod(cfg).init_params(cfg, key, dtype)
+
+
+def param_logical_axes(cfg):
+    return _mod(cfg).logical_axes(cfg)
+
+
+def forward(cfg, params, tokens, **kw):
+    return _mod(cfg).forward(cfg, params, tokens, **kw)
+
+
+def loss_fn(cfg, params, batch, **kw):
+    return _mod(cfg).loss_fn(cfg, params, batch, **kw)
+
+
+def init_decode_state(cfg, params, batch, seq, **kw):
+    return _mod(cfg).init_decode_state(cfg, params, batch, seq, **kw)
+
+
+def decode_step(cfg, params, state, tokens):
+    return _mod(cfg).decode_step(cfg, params, state, tokens)
+
+
+def decode_cache_shape(cfg, batch, seq):
+    return _mod(cfg).decode_cache_shape(cfg, batch, seq)
+
+
+def input_spec_shapes(cfg: ModelConfig, shape: ShapeCfg):
+    """ShapeDtypeStructs for the step inputs of an (arch, shape) cell.
+
+    train/prefill: {tokens, labels[, modality]} at (global_batch, seq_len).
+    decode:        {tokens (B,1)[, modality]} + the decode state comes from
+                   ``decode_cache_shape`` (built under the active policy).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        spec = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.modality_dim:
+            spec["modality"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_modality_tokens, cfg.modality_dim), jnp.float32)
+        return spec
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}

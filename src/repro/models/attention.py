@@ -1,0 +1,311 @@
+"""Attention: GQA (grouped, KV-head-replicated for TP), MLA (DeepSeek-V2),
+cross-attention, and decode paths (including sequence-sharded long-context
+decode, which composes with GSPMD partial-softmax reductions).
+
+Full-sequence attention is *chunked* over query blocks (online masking, O(S)
+live memory) — this is the CPU-compilable stand-in with the same memory
+behavior as the Pallas flash kernel in ``repro.kernels.flash_attention``;
+``attn_impl='pallas'`` swaps the kernel in on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rmsnorm, rope_angles, apply_rope
+from repro.sharding import constrain, current_policy
+
+NEG_INF = -1e30
+
+
+def tp_size() -> int:
+    pol = current_policy()
+    if pol is None or pol.mesh is None:
+        return 1
+    return pol.mesh.shape.get("model", 1)
+
+
+def kv_heads_eff(cfg) -> int:
+    """KV heads after replication for TP (Megatron-style KV-head replication
+    when num_kv_heads < tp): the largest multiple of num_kv_heads that both
+    divides num_heads and is <= tp."""
+    tp = tp_size()
+    kv, h = cfg.num_kv_heads, cfg.num_heads
+    if kv >= tp:
+        return kv
+    best = kv
+    m = kv
+    while m <= tp:
+        if h % m == 0:
+            best = m
+        m += kv
+    return best
+
+
+def build_gqa(cfg, mk, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    return {
+        "wq": mk((d, h, hd), ("embed", "heads", None)),
+        "wk": mk((d, kv, hd), ("embed", None, None)),
+        "wv": mk((d, kv, hd), ("embed", None, None)),
+        "wo": mk((h, hd, d), ("heads", None, "embed")),
+    }
+
+
+def build_mla(cfg, mk):
+    m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": mk((d, m.q_lora_rank), ("embed", None)),
+        "q_norm": mk((m.q_lora_rank,), (None,), "zeros"),
+        "wq_b": mk((m.q_lora_rank, h, qk), (None, "heads", None)),
+        "wkv_a": mk((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", None)),
+        "kv_norm": mk((m.kv_lora_rank,), (None,), "zeros"),
+        "wkv_b": mk((m.kv_lora_rank, h,
+                     m.qk_nope_head_dim + m.v_head_dim), (None, "heads", None)),
+        "wo": mk((h, m.v_head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def _repeat_kv_weight(w, kv: int, kv_eff: int):
+    if kv_eff == kv:
+        return w
+    return jnp.repeat(w, kv_eff // kv, axis=1)
+
+
+def grouped_attend(q, k, v, *, causal: bool, q_pos=None, kv_len=None,
+                   chunk: int = 512, sink=None):
+    """Grouped-query attention, chunked over query blocks.
+
+    q: (B, S, K, G, hd)  — K kv-head groups x G queries per group
+    k,v: (B, T, K, hd)
+    q_pos: int32 (S,) absolute positions of queries (for causal masking);
+    kv_len: scalar — valid KV prefix length (decode); None = all valid.
+    Returns (B, S, K, G, hd).
+    """
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    if q_pos is None:
+        q_pos = jnp.arange(S, dtype=jnp.int32)
+    # adaptive q-chunk: keep the f32 score block ~<= 1 GiB; must divide S
+    if S > chunk:
+        budget = int(1e9)
+        c = budget // max(B * K * G * T * 4, 1)
+        c = max(128, min(chunk, (c // 128) * 128))
+        while c > 1 and S % c:
+            c -= 1
+        chunk = c if S % c == 0 else S
+
+    def block(qc, qp):
+        # qc: (B, c, K, G, hd) -> scores (B, K, G, c, T) in f32
+        s = jnp.einsum("bckgd,btkd->bkgct", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((qc.shape[1], T), dtype=bool)
+        if causal:
+            mask = kv_pos[None, :] <= qp[:, None]
+        if kv_len is not None:
+            mask = mask & (kv_pos[None, :] < kv_len)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgct,btkd->bckgd", p.astype(v.dtype), v)
+
+    if S <= chunk:
+        return block(q, q_pos)
+    assert S % chunk == 0, (S, chunk)
+    qs = q.reshape(B, S // chunk, chunk, K, G, hd)
+    ps = q_pos.reshape(S // chunk, chunk)
+
+    # remat: recompute scores in backward — flash-attention memory behavior
+    @partial(jax.checkpoint, prevent_cse=False)
+    def step(_, inp):
+        qc, qp = inp
+        return None, block(qc, qp)
+
+    _, out = jax.lax.scan(step, None, (jnp.moveaxis(qs, 1, 0), ps))
+    # NB: output head dim comes from v (MLA: qk dim 192 != v dim 128)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, K, G, v.shape[-1])
+
+
+def apply_gqa(cfg, p, x, *, positions=None, causal=True, kv_x=None,
+              chunk: int = 512):
+    """Full-sequence self/cross attention. x: (B, S, D); kv_x: (B, T, D)."""
+    B, S, D = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    kve = kv_heads_eff(cfg)
+    G = h // kve
+    src = x if kv_x is None else kv_x
+    T = src.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    wk = _repeat_kv_weight(p["wk"], kv, kve).astype(x.dtype)
+    wv = _repeat_kv_weight(p["wv"], kv, kve).astype(x.dtype)
+    k = jnp.einsum("btd,dhk->bthk", src, wk)
+    v = jnp.einsum("btd,dhk->bthk", src, wv)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if kv_x is None and cfg.rope_theta > 0:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    qg = q.reshape(B, S, kve, G, hd)
+    ctx = grouped_attend(qg, k, v, causal=causal and kv_x is None,
+                         q_pos=positions, chunk=chunk)
+    ctx = ctx.reshape(B, S, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(x.dtype))
+
+
+def init_gqa_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    kve = max(cfg.num_kv_heads, 1)
+    return {"k": jnp.zeros((batch, seq, kve, cfg.hd), dtype),
+            "v": jnp.zeros((batch, seq, kve, cfg.hd), dtype)}
+
+
+def gqa_cache_shape(cfg, batch: int, seq: int, kve: int, dtype=jnp.bfloat16):
+    shp = (batch, seq, kve, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+def apply_gqa_decode(cfg, p, x, cache, pos, *, cross: bool = False):
+    """One-token decode. x: (B, 1, D); cache k/v: (B, T, KVe, hd); pos scalar.
+
+    For cross-attention the cache is the (precomputed) encoder KV and is not
+    updated. KV cache may be sequence-sharded (long-context): the softmax
+    reductions over T then compile to partial-reduce + all-reduce (the
+    flash-decoding combine), per the NAM fetch-don't-move principle.
+    """
+    B = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    kve = cache["k"].shape[2]
+    G = h // kve
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.rope_theta > 0 and not cross:
+        cos, sin = rope_angles(pos[None].astype(jnp.int32), hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+    if not cross:
+        wk = _repeat_kv_weight(p["wk"], kv, kve).astype(x.dtype)
+        wv = _repeat_kv_weight(p["wv"], kv, kve).astype(x.dtype)
+        knew = jnp.einsum("bsd,dhk->bshk", x, wk)
+        vnew = jnp.einsum("bsd,dhk->bshk", x, wv)
+        if cfg.rope_theta > 0:
+            knew = apply_rope(knew, cos, sin)
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], knew.astype(cache["k"].dtype), pos, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vnew.astype(cache["v"].dtype), pos, axis=1),
+        }
+        kv_len = pos + 1
+    else:
+        kv_len = None
+    qg = q.reshape(B, 1, kve, G, hd)
+    ctx = grouped_attend(qg, cache["k"].astype(x.dtype),
+                         cache["v"].astype(x.dtype), causal=False,
+                         q_pos=pos[None], kv_len=kv_len, chunk=1)
+    ctx = ctx.reshape(B, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(x.dtype))
+    return y, cache
+
+
+# ---------------------------------------------------------------- MLA -----
+
+def _mla_qkv(cfg, p, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    ql = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
+                 p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"].astype(x.dtype))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    latent = rmsnorm(kv_a[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank:][:, :, None, :]  # (B,S,1,rope)
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return q_nope, q_rope, latent, k_rope[:, :, 0, :]
+
+
+def apply_mla(cfg, p, x, *, positions=None, chunk: int = 512):
+    """MLA full-sequence (train/prefill): decompress K/V per block."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope, latent, k_rope = _mla_qkv(cfg, p, x, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", latent, p["wkv_b"].astype(x.dtype))
+    k_nope = kv[..., :m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, h, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    # MHA: groups of 1 (kv-heads == heads here)
+    qg = q[:, :, :, None, :]
+    ctx = grouped_attend(qg, k, v, causal=True, q_pos=positions, chunk=chunk)
+    ctx = ctx[:, :, :, 0, :]
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(x.dtype))
+
+
+def mla_cache_shape(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"latent": jax.ShapeDtypeStruct((batch, seq, m.kv_lora_rank), dtype),
+            "k_rope": jax.ShapeDtypeStruct((batch, seq, m.qk_rope_head_dim),
+                                           dtype)}
+
+
+def init_mla_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"latent": jnp.zeros((batch, seq, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, seq, m.qk_rope_head_dim), dtype)}
+
+
+def apply_mla_decode(cfg, p, x, cache, pos):
+    """Absorbed MLA decode: attention runs in the compressed latent space —
+    the cache is the paper's fine-grained NAM record (576 B/token/layer)."""
+    m = cfg.mla
+    B = x.shape[0]
+    h = cfg.num_heads
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(
+        cfg, p, x, pos[None].astype(jnp.int32))
+    cache = {
+        "latent": jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent_new.astype(cache["latent"].dtype), pos,
+            axis=1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos,
+            axis=1),
+    }
+    lat = cache["latent"].astype(x.dtype)       # (B, T, r)
+    krp = cache["k_rope"].astype(x.dtype)       # (B, T, rope)
+    wkv_b = p["wkv_b"].astype(x.dtype)
+    w_k = wkv_b[..., :m.qk_nope_head_dim]       # (r, h, nope)
+    w_v = wkv_b[..., m.qk_nope_head_dim:]       # (r, h, v)
+    # absorb: q_eff[h, r] = q_nope[h, nope] . w_k[r, h, nope]
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_k)
+    s = (jnp.einsum("bshr,btr->bhst", q_abs, lat,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshk,btk->bhst", q_rope, krp,
+                      preferred_element_type=jnp.float32)) * scale
+    T = lat.shape[1]
+    valid = jnp.arange(T, dtype=jnp.int32)[None, None, None, :] < (pos + 1)
+    s = jnp.where(valid, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", prob, lat)
+    ctx = jnp.einsum("bshr,rhk->bshk", ctx_lat, w_v)
+    y = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(x.dtype))
+    return y, cache

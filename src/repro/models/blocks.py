@@ -1,0 +1,204 @@
+"""Layer-group machinery.
+
+Every architecture is normalized to a *group pattern* — a short list of blocks
+(each block = tuple of sublayers) that repeats G times. Parameters are stacked
+over G and the model body is one ``jax.lax.scan`` over groups: small HLO,
+per-iteration FSDP gathers, and uniform decode-cache handling.
+
+Patterns:
+  dense      [("attn","mlp")] x L
+  hybrid     [("ssm",f0), ..., ("ssm",f6), ("attn",f7)] x L/8   (jamba 1:7)
+  moe        [("attn","mlp"), ("attn","moe")] x L/2             (llama4)
+             [("attn","moe")] x 59  + irregular dense layer 0   (deepseek)
+  ssm        [("ssm",)] x L                                      (mamba2)
+  vlm        [("attn","mlp") x4, ("cross","mlp")] x L/5
+  encdec     enc [("attn","mlp")], dec [("attn","cross","mlp")]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models import moe as M
+from repro.models.common import rmsnorm, build_mlp, apply_mlp
+from repro.sharding import constrain
+
+
+def group_pattern(cfg):
+    """Returns (pattern, G, has_pre_layer). pattern: list of block tuples."""
+    fam = cfg.family
+    if fam in ("dense", "vlm") or (fam == "moe" and cfg.moe is None):
+        pat = [("attn", "mlp")]
+        if fam == "vlm" and cfg.cross_attn_every:
+            per = cfg.cross_attn_every
+            pat = [("attn", "mlp")] * (per - 1) + [("cross", "mlp")]
+        G, r = divmod(cfg.num_layers, len(pat))
+        assert r == 0, (cfg.name, cfg.num_layers, len(pat))
+        return pat, G, False
+    if fam == "moe":
+        m = cfg.moe
+        pre = m.first_dense > 0
+        layers = cfg.num_layers - m.first_dense
+        pat = []
+        for o in range(m.period):
+            gi = m.first_dense + o
+            pat.append(("attn", "moe" if (gi + 1) % m.period == 0 or m.period == 1
+                        else "mlp"))
+        if m.period == 1:
+            pat = [("attn", "moe")]
+        G, r = divmod(layers, len(pat))
+        assert r == 0, (cfg.name, layers, len(pat))
+        return pat, G, pre
+    if fam == "ssm":
+        return [("ssm",)], cfg.num_layers, False
+    if fam == "hybrid":
+        per = cfg.attn_every
+        m = cfg.moe
+        pat = []
+        for o in range(per):
+            mixer = "attn" if o == per - 1 else "ssm"
+            ffn = "mlp"
+            if m is not None and (o + 1) % m.period == 0:
+                ffn = "moe"
+            pat.append((mixer, ffn))
+        G, r = divmod(cfg.num_layers, per)
+        assert r == 0, (cfg.name, cfg.num_layers, per)
+        return pat, G, False
+    if fam == "encdec":
+        return [("attn", "cross", "mlp")], cfg.num_layers, False
+    raise ValueError(fam)
+
+
+def build_sublayer(cfg, mk, kind: str):
+    d = cfg.d_model
+    p = {"norm": mk((d,), (None,), "zeros")}
+    if kind == "attn":
+        p.update(A.build_mla(cfg, mk) if cfg.mla else A.build_gqa(cfg, mk))
+    elif kind == "cross":
+        p.update(A.build_gqa(cfg, mk, cross=True))
+    elif kind == "ssm":
+        p.update(S.build_ssm(cfg, mk))
+    elif kind == "mlp":
+        p.update(build_mlp(cfg, mk))
+    elif kind == "moe":
+        p.update(M.build_moe(cfg, cfg.moe, mk))
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def build_group(cfg, mk, pattern):
+    return {f"b{i}_{'_'.join(blk)}":
+            {f"s{j}_{kind}": build_sublayer(cfg, mk, kind)
+             for j, kind in enumerate(blk)}
+            for i, blk in enumerate(pattern)}
+
+
+# §Perf toggle: constrain sublayer outputs to the sequence-sharded layout
+# BEFORE the residual add, turning GSPMD's all-reduce(+slice) of TP
+# contraction outputs into reduce-scatters (Megatron-SP style). Gated so the
+# paper-faithful baseline measurement is preserved.
+RS_OUTPUTS = False
+
+
+def _res(x):
+    return constrain(x, "batch", "seq_sharded", None)
+
+
+def apply_sublayer(cfg, p, kind, x, *, mem=None, causal=True):
+    """Full-sequence sublayer with pre-norm and residual."""
+    # keep the norm sequence-sharded (bf16) so the SP all-gather happens on
+    # its output, not on an f32-upcast input
+    h = _res(rmsnorm(x, p["norm"], cfg.norm_eps))
+    aux = 0.0
+    if kind == "attn":
+        y = (A.apply_mla(cfg, p, h) if cfg.mla
+             else A.apply_gqa(cfg, p, h, causal=causal))
+    elif kind == "cross":
+        y = A.apply_gqa(cfg, p, h, kv_x=mem, causal=False)
+    elif kind == "ssm":
+        y = S.apply_ssm(cfg, p, h)
+    elif kind == "mlp":
+        y = apply_mlp(cfg, p, h)
+    elif kind == "moe":
+        y, aux = M.apply_moe(cfg, cfg.moe, p, h)
+    else:
+        raise ValueError(kind)
+    if RS_OUTPUTS:
+        y = _res(y)          # force reduce-scatter of the TP partial sums
+    return _res(x + y), aux
+
+
+def apply_group(cfg, gp, x, *, mem=None, causal=True):
+    aux = 0.0
+    for bname in sorted(gp):
+        blk = gp[bname]
+        for sname in sorted(blk):
+            kind = sname.split("_", 1)[1]
+            x, a = apply_sublayer(cfg, blk[sname], kind, x,
+                                  mem=mem, causal=causal)
+            aux = aux + a
+    return x, aux
+
+
+# ------------------------------------------------------------- decode -----
+
+def sublayer_cache_shape(cfg, kind: str, batch: int, seq: int, kve: int):
+    if kind == "attn":
+        if cfg.mla:
+            return A.mla_cache_shape(cfg, batch, seq)
+        return A.gqa_cache_shape(cfg, batch, seq, kve)
+    if kind == "cross":
+        m = max(cfg.num_modality_tokens, 1)
+        return A.gqa_cache_shape(cfg, batch, m, kve)
+    if kind == "ssm":
+        return S.ssm_state_shape(cfg, batch)
+    return None
+
+
+def group_cache_shape(cfg, pattern, batch: int, seq: int, kve: int):
+    out = {}
+    for i, blk in enumerate(pattern):
+        b = {}
+        for j, kind in enumerate(blk):
+            cs = sublayer_cache_shape(cfg, kind, batch, seq, kve)
+            if cs is not None:
+                b[f"s{j}_{kind}"] = cs
+        if b:
+            out[f"b{i}_{'_'.join(blk)}"] = b
+    return out
+
+
+def apply_sublayer_decode(cfg, p, kind, x, cache, pos):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    if kind == "attn":
+        if cfg.mla:
+            y, cache = A.apply_mla_decode(cfg, p, h, cache, pos)
+        else:
+            y, cache = A.apply_gqa_decode(cfg, p, h, cache, pos)
+    elif kind == "cross":
+        y, cache = A.apply_gqa_decode(cfg, p, h, cache, pos, cross=True)
+    elif kind == "ssm":
+        y, cache = S.apply_ssm_decode(cfg, p, h, cache)
+    elif kind == "mlp":
+        y = apply_mlp(cfg, p, h)
+    elif kind == "moe":
+        y, _ = M.apply_moe(cfg, cfg.moe, p, h, decode=True)
+    else:
+        raise ValueError(kind)
+    return x + y, cache
+
+
+def apply_group_decode(cfg, gp, x, caches, pos):
+    new_caches = {}
+    for bname in sorted(gp):
+        blk = gp[bname]
+        for sname in sorted(blk):
+            kind = sname.split("_", 1)[1]
+            c = caches.get(bname, {}).get(sname) if caches else None
+            x, c2 = apply_sublayer_decode(cfg, blk[sname], kind, x, c, pos)
+            if c2 is not None:
+                new_caches.setdefault(bname, {})[sname] = c2
+    return x, new_caches

@@ -1,0 +1,94 @@
+"""Shared building blocks: param builder, norms, RoPE, MLP.
+
+Models are pure-functional: a param pytree (dicts of jnp arrays) plus apply
+functions. The same builder code produces either real initialized arrays or
+the tree of logical-axis tuples (for sharding), guaranteeing structural match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import constrain
+
+
+class Mk:
+    """Parameter factory. mode='init' -> arrays; mode='axes' -> logical axes."""
+
+    def __init__(self, mode: str, key=None, dtype=jnp.float32):
+        self.mode = mode
+        self.dtype = dtype
+        self._key = key
+        self._n = 0
+
+    def __call__(self, shape, axes, scale: float | str = "fan_in"):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.mode == "axes":
+            return tuple(axes)
+        self._n += 1
+        key = jax.random.fold_in(self._key, self._n)
+        if scale == "fan_in":
+            fan = shape[-2] if len(shape) >= 2 else shape[0]
+            std = 1.0 / np.sqrt(fan)
+            return (jax.random.normal(key, shape, self.dtype) * std)
+        if scale == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if scale == "ones":
+            return jnp.ones(shape, self.dtype)
+        return jax.random.normal(key, shape, self.dtype) * float(scale)
+
+
+def rmsnorm(x, w, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w)).astype(dt)
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: int32[...]; returns (cos, sin) of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., seq, heads, head_dim]; cos/sin: [..., seq, head_dim//2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def build_mlp(cfg, mk):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.gated_mlp:
+        return {"wi": mk((d, 2 * f), ("embed", "ff")),
+                "wo": mk((f, d), ("ff", "embed"))}
+    return {"wi": mk((d, f), ("embed", "ff")),
+            "wo": mk((f, d), ("ff", "embed"))}
+
+
+def apply_mlp(cfg, p, x):
+    # x: (B, S, D) full-seq; ff dim is tensor-parallel over 'model'.
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if cfg.gated_mlp:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token CE in f32; logits (B,S,V), labels int32 (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (lse - ll) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,129 @@
+"""Encoder-decoder (Whisper-style). The conv audio frontend is a STUB: the
+pipeline provides precomputed mel-frame features (B, M, mel) which are
+linearly projected — per the assignment, only the transformer backbone is
+modeled. Cross-attention KV is computed once at encode time and then read
+many times during decode: the NAM one-sided-write-then-read pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models.common import Mk, rmsnorm, cross_entropy
+from repro.models.lm import StackedMk, ACT_DTYPE
+from repro.sharding import constrain
+
+
+def _enc_pattern(cfg):
+    return [("attn", "mlp")], cfg.encoder_layers
+
+
+def _dec_pattern(cfg):
+    return [("attn", "cross", "mlp")], cfg.num_layers
+
+
+def build(cfg, mk):
+    d, v = cfg.d_model, cfg.vocab_size
+    enc_pat, ge = _enc_pattern(cfg)
+    dec_pat, gd = _dec_pattern(cfg)
+    p = {
+        "embed": mk((v, d), ("vocab", None), 0.02),
+        "mod_proj": mk((cfg.modality_dim, d), (None, None)),
+        "enc_pos": mk((cfg.num_modality_tokens, d), (None, None), 0.02),
+        "enc_groups": B.build_group(cfg, StackedMk(mk, ge), enc_pat),
+        "enc_norm": mk((d,), (None,), "zeros"),
+        "groups": B.build_group(cfg, StackedMk(mk, gd), dec_pat),
+        "final_norm": mk((d,), (None,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = mk((d, v), (None, "vocab"))
+    return p
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    return build(cfg, Mk("init", key, dtype))
+
+
+def logical_axes(cfg):
+    return build(cfg, Mk("axes"))
+
+
+def encode(cfg, params, modality):
+    x = jnp.einsum("bmd,de->bme", modality.astype(ACT_DTYPE),
+                   params["mod_proj"].astype(ACT_DTYPE))
+    x = x + params["enc_pos"].astype(ACT_DTYPE)[None]
+    x = constrain(x, "batch", "seq_sharded", None)
+
+    def body(x, gp):
+        x, _ = B.apply_group(cfg, gp, x, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False), x,
+                        params["enc_groups"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _head(cfg, params, x):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return constrain(logits, "batch", None, "vocab")
+
+
+def forward(cfg, params, tokens, *, modality, remat=True):
+    mem = encode(cfg, params, modality)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ACT_DTYPE)
+    x = constrain(x, "batch", "seq_sharded", None)
+
+    def body(carry, gp):
+        x, aux = carry
+        x, a = B.apply_group(cfg, gp, x, mem=mem)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["groups"])
+    return _head(cfg, params, x), aux
+
+
+def loss_fn(cfg, params, batch, *, aux_coef=None):
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          modality=batch["modality"])
+    return cross_entropy(logits, batch["labels"])
+
+
+def decode_cache_shape(cfg, batch: int, seq: int):
+    pat, gd = _dec_pattern(cfg)
+    kve = max(cfg.num_kv_heads, 1)  # decode caches: raw KV heads,
+    # sequence-sharded over 'model' (flash-decoding combine) — not TP-replicated
+    per_group = B.group_cache_shape(cfg, pat, batch, seq, kve)
+    stacked = jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct((gd,) + sd.shape, sd.dtype), per_group)
+    return {"caches": stacked, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_decode_state(cfg, params, batch: int, seq: int, *, modality=None):
+    from repro.models.lm import _precompute_cross
+    shapes = decode_cache_shape(cfg, batch, seq)
+    state = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), shapes)
+    if modality is not None:
+        mem = encode(cfg, params, modality)
+        state["caches"] = _precompute_cross(cfg, params, mem, state["caches"])
+    return state
+
+
+def decode_step(cfg, params, state, tokens):
+    pos = state["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ACT_DTYPE)
+    x = constrain(x, "batch", None, None)
+
+    def body(x, inp):
+        gp, cache = inp
+        x, nc = B.apply_group_decode(cfg, gp, x, cache, pos)
+        return x, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], state["caches"]))
+    logits = _head(cfg, params, x)
+    return logits, {"caches": new_caches, "pos": pos + 1}

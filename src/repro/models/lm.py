@@ -1,0 +1,219 @@
+"""Decoder-only causal LM (dense / MoE / SSM / hybrid / VLM-with-cross-attn).
+
+Parameters are stacked over layer groups and the body is one lax.scan; with a
+sharding policy installed, weights live FSDP x TP sharded in the NAM pool and
+are gathered just-in-time per group (fetch -> compute -> write-back).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models.common import Mk, rmsnorm, cross_entropy
+from repro.sharding import constrain
+
+ACT_DTYPE = jnp.bfloat16
+
+
+class StackedMk:
+    def __init__(self, mk, g: int):
+        self.mk, self.g = mk, g
+
+    def __call__(self, shape, axes, scale="fan_in"):
+        return self.mk((self.g,) + tuple(shape), ("stack",) + tuple(axes),
+                       scale)
+
+
+def build(cfg, mk):
+    d, v = cfg.d_model, cfg.vocab_size
+    pattern, G, pre = B.group_pattern(cfg)
+    # vocab tables are sharded on the vocab dim only (model axis); double
+    # sharding the d_model dim too makes GSPMD all-gather the full table.
+    p = {"embed": mk((v, d), ("vocab", None), 0.02),
+         "final_norm": mk((d,), (None,), "zeros")}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = mk((d, v), (None, "vocab"))
+    if cfg.modality_dim:
+        p["mod_proj"] = mk((cfg.modality_dim, d), (None, None))
+    if pre:  # deepseek-v2: irregular dense first layer (d_ff = cfg.d_ff)
+        p["pre"] = {"s0_attn": B.build_sublayer(cfg, mk, "attn"),
+                    "s1_mlp": B.build_sublayer(cfg, mk, "mlp")}
+    p["groups"] = B.build_group(cfg, StackedMk(mk, G), pattern)
+    return p
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    return build(cfg, Mk("init", key, dtype))
+
+
+def logical_axes(cfg):
+    return build(cfg, Mk("axes"))
+
+
+def _embed(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ACT_DTYPE)
+    return constrain(x, "batch", "seq_sharded", None)
+
+
+def _head(cfg, params, x):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return constrain(logits, "batch", None, "vocab")
+
+
+# §Perf toggle: stream the cross-entropy over sequence chunks so the full
+# (B, S, V) f32 logits tensor never materializes (memory-term lever).
+CE_CHUNK = 0
+
+
+def forward_hidden(cfg, params, tokens, *, modality=None, remat=True):
+    """tokens: (B, S) int32 -> (final hidden (B,S,D) pre-head, aux)."""
+    x = _embed(cfg, params, tokens)
+    mem = None
+    if cfg.modality_dim and modality is not None:
+        mem = jnp.einsum("bmd,de->bme", modality.astype(ACT_DTYPE),
+                         params["mod_proj"].astype(ACT_DTYPE))
+    if "pre" in params:
+        x, _ = B.apply_sublayer(cfg, params["pre"]["s0_attn"], "attn", x)
+        x, _ = B.apply_sublayer(cfg, params["pre"]["s1_mlp"], "mlp", x)
+
+    def body(carry, gp):
+        x, aux = carry
+        x, a = B.apply_group(cfg, gp, x, mem=mem)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["groups"])
+    return x, aux
+
+
+def forward(cfg, params, tokens, *, modality=None, remat=True):
+    """tokens: (B, S) int32 -> (logits (B,S,V), aux)."""
+    x, aux = forward_hidden(cfg, params, tokens, modality=modality,
+                            remat=remat)
+    return _head(cfg, params, x), aux
+
+
+def _chunked_ce(cfg, params, x, labels, chunk: int):
+    """CE streamed over sequence chunks: per-chunk vocab-parallel logits in
+    f32, rematted — O(B*chunk*V/tp) live instead of O(B*S*V/tp)."""
+    B, S, D = x.shape
+    n = max(S // chunk, 1)
+    c = S // n
+    xs = jnp.moveaxis(x.reshape(B, n, c, D), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(B, n, c), 1, 0)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def body(acc, inp):
+        xc, yc = inp
+        logits = _head(cfg, params, xc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yc[..., None].clip(0),
+                                 axis=-1)[..., 0]
+        mask = (yc >= 0).astype(jnp.float32)
+        return (acc[0] + ((lse - ll) * mask).sum(), acc[1] + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xs, ys))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg, params, batch, *, aux_coef=None):
+    if CE_CHUNK:
+        x, aux = forward_hidden(cfg, params, batch["tokens"],
+                                modality=batch.get("modality"))
+        loss = _chunked_ce(cfg, params, x, batch["labels"], CE_CHUNK)
+    else:
+        logits, aux = forward(cfg, params, batch["tokens"],
+                              modality=batch.get("modality"))
+        loss = cross_entropy(logits, batch["labels"])
+    coef = (cfg.moe.router_aux_coef if (cfg.moe and aux_coef is None)
+            else (aux_coef or 0.0))
+    return loss + coef * aux
+
+
+# --------------------------------------------------------------- decode ---
+
+def decode_cache_shape(cfg, batch: int, seq: int):
+    pattern, G, pre = B.group_pattern(cfg)
+    kve = max(cfg.num_kv_heads, 1)  # decode caches: raw KV heads,
+    # sequence-sharded over 'model' (flash-decoding combine) — not TP-replicated
+    per_group = B.group_cache_shape(cfg, pattern, batch, seq, kve)
+    stacked = jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct((G,) + sd.shape, sd.dtype), per_group)
+    out = {"caches": stacked,
+           "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if pre:
+        out["pre"] = B.sublayer_cache_shape(cfg, "attn", batch, seq, kve)
+    return out
+
+
+def _precompute_cross(cfg, params, mem, caches):
+    """Fill cross-attention KV caches from the modality memory."""
+    kv = kve = max(cfg.num_kv_heads, 1)
+
+    def group_kv(gp):
+        out = {}
+        for bname in sorted(gp):
+            for sname in sorted(gp[bname]):
+                if sname.split("_", 1)[1] != "cross":
+                    continue
+                p = gp[bname][sname]
+                h = rmsnorm(mem, p["norm"], cfg.norm_eps)
+                wk = A._repeat_kv_weight(p["wk"], kv, kve).astype(mem.dtype)
+                wv = A._repeat_kv_weight(p["wv"], kv, kve).astype(mem.dtype)
+                out.setdefault(bname, {})[sname] = {
+                    "k": jnp.einsum("btd,dhk->bthk", h, wk),
+                    "v": jnp.einsum("btd,dhk->bthk", h, wv)}
+        return out
+
+    _, cross = jax.lax.scan(lambda _, gp: (None, group_kv(gp)),
+                            None, params["groups"])
+    # merge: replace zero cross caches with the computed ones
+    merged = dict(caches)
+    for bname, bv in cross.items():
+        mb = dict(merged.get(bname, {}))
+        for sname, c in bv.items():
+            mb[sname] = jax.tree.map(lambda a: a.astype(ACT_DTYPE), c)
+        merged[bname] = mb
+    return merged
+
+
+def init_decode_state(cfg, params, batch: int, seq: int, *, modality=None):
+    shapes = decode_cache_shape(cfg, batch, seq)
+    state = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), shapes)
+    if cfg.modality_dim and modality is not None:
+        mem = jnp.einsum("bmd,de->bme", modality.astype(ACT_DTYPE),
+                         params["mod_proj"].astype(ACT_DTYPE))
+        state["caches"] = _precompute_cross(cfg, params, mem, state["caches"])
+    return state
+
+
+def decode_step(cfg, params, state, tokens):
+    """tokens: (B, 1) int32 -> (logits (B,1,V), new state)."""
+    pos = state["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ACT_DTYPE)
+    x = constrain(x, "batch", None, None)
+    new_state = {"pos": pos + 1}
+    if "pre" in params:
+        p = params["pre"]
+        x, c = B.apply_sublayer_decode(cfg, p["s0_attn"], "attn", x,
+                                       state["pre"], pos)
+        x, _ = B.apply_sublayer_decode(cfg, p["s1_mlp"], "mlp", x, None, pos)
+        new_state["pre"] = c
+
+    def body(x, inp):
+        gp, cache = inp
+        x, nc = B.apply_group_decode(cfg, gp, x, cache, pos)
+        return x, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], state["caches"]))
+    new_state["caches"] = new_caches
+    logits = _head(cfg, params, x)
+    return logits, new_state

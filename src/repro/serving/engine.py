@@ -1,0 +1,110 @@
+"""Serving engine: continuous batching over a NAM-resident KV pool.
+
+Decode slots form a shared pool; slot allocation goes through the RSI
+lock-word CAS (repro.core.nam.cas) — the same validate+lock primitive the
+paper uses for transactions arbitrates concurrent slot claims, so any
+frontend ("client" in NAM terms) can claim capacity without a coordinator.
+
+The engine runs fixed-shape jitted steps (prefill once per request wave,
+then one decode_step per token across all active slots) — static shapes keep
+the compiled artifact stable, production-style.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nam
+from repro.models import api
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int = 16
+    out: list = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        # RSI-style lock words guarding each decode slot (0 = free)
+        self.slot_words = jnp.zeros((slots,), jnp.uint32)
+        self.state = api.init_decode_state(cfg, params, slots, max_seq)
+        self.active: dict[int, Request] = {}
+        self._decode = jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t))
+        self._pos = np.zeros((slots,), np.int32)
+
+    # ------------------------------------------------------ slot alloc --
+
+    def _claim_slots(self, n: int):
+        """Claim up to n free slots via CAS on the lock words (one-sided)."""
+        idx = jnp.arange(self.slots, dtype=jnp.int32)
+        expected = jnp.zeros((self.slots,), jnp.uint32)
+        ok, words = nam.cas(self.slot_words, idx, expected,
+                            jnp.full((self.slots,), 1 << 31, jnp.uint32))
+        free = [int(i) for i in np.nonzero(np.array(ok))[0][:n]]
+        keep = np.zeros(self.slots, bool)
+        keep[free] = True
+        self.slot_words = jnp.where(jnp.asarray(keep), words,
+                                    self.slot_words)
+        return free
+
+    def _release(self, slot: int):
+        self.slot_words = self.slot_words.at[slot].set(0)
+
+    # --------------------------------------------------------- serving --
+
+    def submit(self, reqs: list[Request]):
+        free = self._claim_slots(len(reqs))
+        assert len(free) >= len(reqs), "pool exhausted"
+        for r, s in zip(reqs, free):
+            r.slot = s
+            self.active[s] = r
+        # prefill: feed prompts token-by-token through the decode path
+        # (tiny prompts; a chunked prefill kernel is the TPU fast path)
+        maxp = max(len(r.prompt) for r in reqs)
+        for t in range(maxp):
+            tok = np.zeros((self.slots, 1), np.int32)
+            for r in reqs:
+                if t < len(r.prompt):
+                    tok[r.slot, 0] = r.prompt[t]
+            self._step(jnp.asarray(tok))
+
+    def _step(self, tokens):
+        logits, self.state = self._decode(self.params, self.state, tokens)
+        return np.array(jnp.argmax(logits[:, 0], axis=-1))
+
+    def decode_round(self):
+        """One token for every active request (continuous batching)."""
+        tok = np.zeros((self.slots, 1), np.int32)
+        for s, r in self.active.items():
+            tok[s, 0] = (r.out[-1] if r.out else
+                         (r.prompt[-1] if len(r.prompt) else 0))
+        nxt = self._step(jnp.asarray(tok))
+        finished = []
+        for s, r in list(self.active.items()):
+            r.out.append(int(nxt[s]))
+            if len(r.out) >= r.max_new_tokens:
+                r.done = True
+                finished.append(r)
+                del self.active[s]
+                self._release(s)
+        return finished
+
+    def run(self, reqs: list[Request]):
+        self.submit(reqs)
+        done = []
+        while self.active:
+            done.extend(self.decode_round())
+        return done

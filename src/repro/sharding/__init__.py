@@ -1,0 +1,5 @@
+from repro.sharding.policy import (ShardingPolicy, set_policy, current_policy,
+                                   constrain, param_pspec, make_policy)
+
+__all__ = ["ShardingPolicy", "set_policy", "current_policy", "constrain",
+           "param_pspec", "make_policy"]

@@ -1,0 +1,133 @@
+"""Logical-axis sharding policy.
+
+Models annotate tensors with *logical* axis names ("batch", "seq", "heads",
+"ff", "experts", "embed", "vocab", "kv_seq", ...). A ShardingPolicy maps those
+to physical mesh axes and applies ``with_sharding_constraint``. With no policy
+installed (single-device smoke tests) everything is a no-op.
+
+This is the NAM layout table: parameters live in the pool sharded over
+(fsdp='data') x (tensor='model'); activations are batch-sharded over
+(pod, data) with Megatron-style sequence sharding over 'model' between blocks.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Activation logical axes -> mesh axes (None = replicated / unsharded).
+# Parameter logical axes use the same table ('embed' is the FSDP dim).
+DEFAULT_RULES: dict[str, object] = {
+    # activations
+    "batch": ("data",),          # ('pod','data') on the multi-pod mesh
+    "seq_sharded": "model",      # sequence-parallel residual stream
+    "seq": None,                 # full sequence (inside attention blocks)
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "kv_seq": None,              # decode KV cache sequence dim
+    "kv_batch": ("data",),
+    # parameters
+    "embed": "data",             # FSDP shard of the d_model dim (NAM pool)
+    "ssm_inner": "model",
+    "stack": None,               # scan-stacked layer-group dim
+    "state": None,
+}
+
+
+@dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    rules: dict = field(default_factory=dict)
+
+    def resolve(self, logical_axes) -> P:
+        parts = []
+        for name in logical_axes:
+            if name is None:
+                parts.append(None)
+                continue
+            parts.append(self.rules.get(name, None))
+        return P(*parts)
+
+    def sharding(self, logical_axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(logical_axes))
+
+
+# §Perf toggle (see launch/dryrun.py --opts decode_tp)
+DECODE_TP = False
+
+_tls = threading.local()
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return getattr(_tls, "policy", None)
+
+
+@contextlib.contextmanager
+def set_policy(policy: Optional[ShardingPolicy]):
+    prev = current_policy()
+    _tls.policy = policy
+    try:
+        yield policy
+    finally:
+        _tls.policy = prev
+
+
+def constrain(x, *logical_axes):
+    """Annotate activation x with logical axes; no-op without a policy."""
+    pol = current_policy()
+    if pol is None:
+        return x
+    assert x.ndim == len(logical_axes), (x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, pol.sharding(logical_axes))
+
+
+def param_pspec(logical_axes, rules=None) -> P:
+    """PartitionSpec for a parameter's logical axes under given rules."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    return ShardingPolicy(mesh=None, rules=rules).resolve(logical_axes)
+
+
+def make_policy(mesh: Mesh, *, shape_kind: str = "train",
+                overrides: Optional[dict] = None) -> ShardingPolicy:
+    """Build the standard policy for a mesh + input-shape kind.
+
+    train/prefill: batch over (pod?, data); sequence-parallel residual.
+    decode:        batch over (pod?, data); KV local.
+    long decode (global_batch < data size): batch unsharded, KV sequence
+                   sharded over (pod?, data) with partial-softmax combine.
+    """
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = batch_axes
+    rules["kv_batch"] = batch_axes
+    rules["embed"] = "data" if "data" in axes else None
+    if shape_kind == "decode":
+        # KV/latent caches: batch over (pod, data), sequence over 'model'
+        # (decode attention = partial softmax + combine across 'model');
+        # raw KV heads stay replicated (all assigned archs have kv < tp).
+        rules["kv_seq"] = "model"
+        rules["kv_heads"] = None
+        if DECODE_TP:
+            # §Perf: pure-TP decode — batch replicated across 'data' so
+            # GSPMD keeps weights in place and all-reduces tiny activation
+            # partials instead of all-gathering FSDP weight shards per
+            # token. KV history spreads over the whole (data, model) fabric.
+            rules["batch"] = None
+            rules["kv_batch"] = None
+            rules["kv_seq"] = ("data", "model")
+    if shape_kind == "long_decode":
+        rules["batch"] = None
+        rules["kv_batch"] = None
+        rules["kv_seq"] = batch_axes   # sequence-sharded KV/SSM history
+        rules["seq_sharded"] = "model"
+    if overrides:
+        rules.update(overrides)
+    return ShardingPolicy(mesh=mesh, rules=rules)

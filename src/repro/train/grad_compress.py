@@ -1,0 +1,78 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+The paper's thesis is that fast fabrics make communication cheap — but the
+multi-pod 'pod' axis crosses the slower DCI, where compressing the gradient
+all-reduce still pays. Block-wise int8 quantization with an error-feedback
+residual (Seide et al. / 1-bit-Adam style): the quantization error is carried
+to the next step, so convergence is preserved (unbiased in the long run).
+
+Usage: wrap the optimizer —
+    opt = compressed(make_adamw(...), block=256)
+and carry the returned residual state alongside the optimizer state; or use
+``compress/decompress`` directly around a cross-pod psum.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _blockify(x, block):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), pad
+
+
+def compress(g, *, block: int = 256):
+    """g: float tree leaf -> (int8 codes, f32 per-block scales)."""
+    b, pad = _blockify(g.astype(jnp.float32), block)
+    scale = jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0
+    codes = jnp.round(b / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return codes, scale[:, 0]
+
+
+def decompress(codes, scale, shape, *, block: int = 256):
+    flat = (codes.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_with_feedback(g, residual, *, block: int = 256):
+    """Returns (codes, scale, new_residual): residual carries what int8
+    couldn't represent into the next step (error feedback)."""
+    corrected = g.astype(jnp.float32) + residual
+    codes, scale = compress(corrected, block=block)
+    approx = decompress(codes, scale, g.shape, block=block)
+    return codes, scale, corrected - approx
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_grads(grads, residuals, *, block: int = 256):
+    """Quantize+dequantize every gradient leaf with error feedback — the
+    wire format is int8 + one f32 scale per `block` values (~4x smaller).
+    Returns (dequantized grads to feed the optimizer, new residuals)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    new_g, new_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        codes, scale, nr = compress_with_feedback(g, r, block=block)
+        new_g.append(decompress(codes, scale, g.shape, block=block))
+        new_r.append(nr)
+    return jax.tree.unflatten(tdef, new_g), jax.tree.unflatten(tdef, new_r)
+
+
+def wire_bytes(params, *, block: int = 256) -> tuple[int, int]:
+    """(compressed, uncompressed-f32) bytes per full gradient exchange."""
+    comp = unc = 0
+    for p in jax.tree.leaves(params):
+        comp += p.size + (p.size + block - 1) // block * 4
+        unc += p.size * 4
+    return comp, unc

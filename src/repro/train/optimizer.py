@@ -1,0 +1,157 @@
+"""Optimizers: AdamW and factored Adafactor (for the >=90B archs).
+
+Functional: ``opt.init(params) -> state``; ``opt.update(grads, state, params)
+-> (new_params, new_state)``. Optimizer state lives in the NAM pool with the
+same sharding as its parameter (factored stats drop the reduced axis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    state_logical_axes: Callable  # (param_axes_tree) -> state axes tree
+
+
+def warmup_cosine(step, base_lr, warmup=200, total=10_000):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ------------------------------------------------------------------ AdamW --
+
+def make_adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+               schedule=warmup_cosine):
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr_t = schedule(c, lr)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * p
+            return (p - lr_t * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v, "count": c}
+
+    def state_axes(param_axes):
+        return {"m": param_axes, "v": param_axes, "count": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+# -------------------------------------------------------------- Adafactor --
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def make_adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_thresh=1.0,
+                   schedule=warmup_cosine):
+    """Factored second-moment (Shazeer & Stern); no momentum; RMS clipping.
+    Row/col stats factor the last two axes; leading (stack) axes kept."""
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr_t = schedule(c, lr)
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                # u = g / sqrt(vr (x) vc / mean(vr))   (factored 2nd moment)
+                u = g * jax.lax.rsqrt(
+                    (vr[..., None] * vc[..., None, :])
+                    / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], eps)
+                    + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            return (p - lr_t * u).astype(p.dtype), ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        new_p, new_s = [], []
+        for g, s, p in zip(flat_g, flat_s, flat_p):
+            np_, ns_ = upd(g, s, p)
+            new_p.append(np_)
+            new_s.append(ns_)
+        return (jax.tree.unflatten(tdef, new_p),
+                {"s": jax.tree.unflatten(tdef, new_s), "count": c})
+
+    def state_axes(param_axes):
+        def st(ax):
+            ax = tuple(ax)
+            if len(ax) >= 2:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+        return {"s": jax.tree.map(st, param_axes,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+                "count": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return make_adamw(**kw)
+    if name == "adafactor":
+        return make_adafactor(**kw)
+    raise ValueError(name)

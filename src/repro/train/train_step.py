@@ -1,0 +1,178 @@
+"""Jitted train/serve steps with NAM-pool shardings.
+
+``build_train_step`` returns (jitted step, in/out shardings) — parameters and
+optimizer state are FSDP x TP sharded (the NAM pool); each step fetches shards
+just-in-time (all-gather), computes, and writes back gradients/updated params
+(reduce-scatter), with the scan-over-groups overlapping the fetch of group
+g+1 with the compute of group g (the paper's prefetching storage manager).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api
+from repro.sharding import current_policy, set_policy
+from repro.train.optimizer import Optimizer, clip_by_global_norm
+
+
+def _divisible_sharding(policy, ax, shape):
+    """Resolve logical axes -> NamedSharding, replicating any dim whose size
+    the assigned mesh axes don't divide (jit argument shardings must divide)."""
+    ax = tuple(ax)
+    spec = policy.resolve(ax)
+    fixed = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in names:
+            n *= policy.mesh.shape[a]
+        fixed.append(entry if dim % n == 0 else None)
+    return NamedSharding(policy.mesh, P(*fixed))
+
+
+def param_shardings(cfg, policy, pshapes=None):
+    axes = api.param_logical_axes(cfg)
+    if pshapes is None:
+        pshapes = jax.eval_shape(
+            lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    return jax.tree.map(
+        lambda ax, sd: _divisible_sharding(policy, ax, sd.shape),
+        axes, pshapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def opt_state_shardings(cfg, policy, opt: Optimizer, oshapes=None):
+    axes = api.param_logical_axes(cfg)
+    st_axes = opt.state_logical_axes(axes)
+    if oshapes is None:
+        pshapes = jax.eval_shape(
+            lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+        oshapes = jax.eval_shape(opt.init, pshapes)
+    return jax.tree.map(
+        lambda ax, sd: _divisible_sharding(policy, tuple(ax), sd.shape),
+        st_axes, oshapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_shardings(cfg, policy, spec_shapes):
+    b = policy.rules.get("batch") or None
+    out = {}
+    for k, v in spec_shapes.items():
+        if k in ("tokens", "labels"):
+            s = "seq_sharded" if v.shape[-1] > 1 else None
+            out[k] = policy.sharding(("batch", s))
+        elif k == "modality":
+            out[k] = policy.sharding(("batch", None, None))
+        else:
+            out[k] = NamedSharding(policy.mesh, P())
+    return out
+
+
+def cache_logical_axes(cfg, state_shapes):
+    """Logical axes for the decode state, by leaf name/rank."""
+    def leaf_axes(path, sd):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1]
+        nd = len(sd.shape)
+        if name in ("k", "v"):          # (G?, B, T, KVe, hd)
+            ax = ("kv_batch", "kv_seq", "kv_heads", None)
+        elif name in ("latent", "k_rope"):
+            ax = ("kv_batch", "kv_seq", None)
+        elif name == "state":           # ssm (B, H, hd, N)
+            ax = ("kv_batch", "heads", None, None)
+        elif name.startswith("conv_x"):
+            ax = ("kv_batch", None, "ssm_inner")
+        elif name.startswith("conv"):
+            ax = ("kv_batch", None, None)
+        elif name == "pos":
+            return ()
+        else:
+            ax = (None,) * nd
+        if nd == len(ax) + 1:           # group-stacked
+            ax = ("stack",) + ax
+        assert len(ax) == nd, (names, sd.shape, ax)
+        return ax
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, state_shapes)
+
+
+def decode_state_shardings(cfg, policy, state_shapes):
+    axes = cache_logical_axes(cfg, state_shapes)
+    return jax.tree.map(
+        lambda ax, sd: _divisible_sharding(policy, tuple(ax), sd.shape),
+        axes, state_shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def build_train_step(cfg, opt: Optimizer, *, max_grad_norm: float = 1.0,
+                     microbatches: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+    Must be called (and lowered) under ``set_policy``.
+
+    microbatches > 1: gradient accumulation over a scan — divides the
+    activation live-set by M at the cost of an f32 grad accumulator."""
+    policy = current_policy()
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: api.loss_fn(cfg, p, batch))(params)
+
+    def step(params, opt_state, batch):
+        with set_policy(policy):
+            if microbatches == 1:
+                loss, grads = grads_of(params, batch)
+            else:
+                def split(x):
+                    b = x.shape[0]
+                    assert b % microbatches == 0, (b, microbatches)
+                    return x.reshape((microbatches, b // microbatches)
+                                     + x.shape[1:])
+                mbs = jax.tree.map(split, batch)
+
+                def body(acc, mb):
+                    loss_sum, g_acc = acc
+                    loss, g = grads_of(params, mb)
+                    g_acc = jax.tree.map(jnp.add, g_acc, g)
+                    return (loss_sum + loss, g_acc), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    body, (jnp.float32(0.0), zeros), mbs)
+                loss = loss / microbatches
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            metrics = {"loss": loss, "grad_norm": gnorm,
+                       "step": new_state["count"]}
+            return new_params, new_state, metrics
+
+    return step
+
+
+def build_prefill_step(cfg):
+    policy = current_policy()
+
+    def step(params, batch):
+        with set_policy(policy):
+            logits, _ = api.forward(cfg, params, batch["tokens"],
+                                    modality=batch.get("modality"),
+                                    remat=False)
+            return jnp.argmax(logits[:, -1:], axis=-1)
+
+    return step
+
+
+def build_serve_step(cfg):
+    """One decode step: (params, state, tokens) -> (next_tokens, state)."""
+    policy = current_policy()
+
+    def step(params, state, tokens):
+        with set_policy(policy):
+            logits, state = api.decode_step(cfg, params, state, tokens)
+            return jnp.argmax(logits, axis=-1), state
+
+    return step

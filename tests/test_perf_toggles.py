@@ -1,0 +1,43 @@
+"""The §Perf optimization toggles must be numerically transparent."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import api, blocks, lm
+
+
+@pytest.fixture(autouse=True)
+def _reset():
+    yield
+    lm.CE_CHUNK = 0
+    blocks.RS_OUTPUTS = False
+
+
+def test_chunked_ce_matches_full(tmp_path):
+    cfg = reduce_config(get_config("glm4-9b"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    l1 = float(api.loss_fn(cfg, params, batch))
+    lm.CE_CHUNK = 16
+    l2 = float(api.loss_fn(cfg, params, batch))
+    assert abs(l1 - l2) < 1e-3
+    g1 = jax.grad(lambda p: api.loss_fn(cfg, p, batch))(params)
+    lm.CE_CHUNK = 0
+    g0 = jax.grad(lambda p: api.loss_fn(cfg, p, batch))(params)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)))
+    assert d < 1e-3
+
+
+def test_rs_outputs_identity_single_device():
+    cfg = reduce_config(get_config("starcoder2-15b"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    l1, _ = api.forward(cfg, params, toks)
+    blocks.RS_OUTPUTS = True
+    l2, _ = api.forward(cfg, params, toks)
+    assert float(jnp.abs(l1 - l2).max()) == 0.0

@@ -1,0 +1,134 @@
+"""RSI protocol invariants (hypothesis property tests).
+
+SI invariants under concurrent commit batches:
+  1. committed txn => all its writes installed at its CID, words unlocked
+  2. aborted txn   => no trace of its writes
+  3. no lost updates: each record's final CID belongs to exactly the winning
+     committed writer
+  4. conflicting txns on the same (record, RID): at most one commits
+  5. snapshot reads see the newest version <= RID
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rsi
+from repro.core.rsi import LOCK_BIT, StoreCfg, TxnBatch
+
+
+def _mk_store(nrec, ncid=1):
+    cfg = StoreCfg(num_records=nrec, payload_words=2, version_slots=2)
+    store = rsi.init_store(cfg)
+    store["words"] = jnp.full((nrec,), ncid, jnp.uint32)
+    store["cids"] = store["cids"].at[:, 0].set(ncid)
+    return store
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 12), st.integers(1, 3))
+def test_si_invariants(seed, num_txns, writes_per_txn):
+    rng = np.random.RandomState(seed)
+    nrec = 8
+    store = _mk_store(nrec)
+    recs = rng.randint(0, nrec, size=(num_txns, writes_per_txn))
+    # unique records within a txn (SI: one write per record per txn)
+    for i in range(num_txns):
+        recs[i] = rng.permutation(nrec)[:writes_per_txn]
+    txns = TxnBatch(
+        write_recs=jnp.asarray(recs, jnp.int32),
+        read_cids=jnp.full((num_txns, writes_per_txn), 1, jnp.uint32),
+        new_payload=jnp.asarray(
+            rng.randint(1, 1000, size=(num_txns, writes_per_txn, 2)),
+            jnp.uint32),
+        cid=jnp.asarray(10 + np.arange(num_txns), jnp.uint32),
+    )
+    ok, store2 = rsi.commit(store, txns)
+    ok = np.array(ok)
+    words = np.array(store2["words"])
+    cids0 = np.array(store2["cids"][:, 0])
+    pay0 = np.array(store2["payload"][:, 0])
+
+    # 1+2: all words unlocked after the batch
+    assert not (words & (1 << 31)).any()
+
+    # ground truth = the protocol's single-round CAS semantics: each record
+    # is granted to the lowest-priority requester (even if that txn later
+    # aborts and releases — no retry within the round, like the paper's 2PC
+    # prepare); a txn commits iff it won ALL its locks.
+    owner = {}
+    for i in range(num_txns):
+        for r in recs[i]:
+            owner.setdefault(r, i)
+    gt_ok = [all(owner[r] == i for r in recs[i]) for i in range(num_txns)]
+    gt_word = np.full(nrec, 1, np.uint32)
+    for i in range(num_txns):
+        if gt_ok[i]:
+            for r in recs[i]:
+                gt_word[r] = 10 + i
+    np.testing.assert_array_equal(ok, np.array(gt_ok))
+    np.testing.assert_array_equal(words, gt_word)
+
+    # 3: winner's payload installed at slot 0
+    for i in np.nonzero(ok)[0]:
+        for j, r in enumerate(recs[i]):
+            assert cids0[r] == 10 + i
+            np.testing.assert_array_equal(
+                pay0[r], np.array(txns.new_payload)[i, j])
+
+    # 5: snapshot read at RID=1 still sees the seed version
+    _, cid, vis = rsi.read_snapshot(store2, jnp.arange(nrec), jnp.uint32(1))
+    assert (np.array(cid) == 1).all() and np.array(vis).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_conflicting_txns_one_winner(seed):
+    rng = np.random.RandomState(seed)
+    store = _mk_store(4)
+    # every txn writes record 0 under the same RID: exactly one commits
+    t = 6
+    txns = TxnBatch(
+        write_recs=jnp.zeros((t, 1), jnp.int32),
+        read_cids=jnp.full((t, 1), 1, jnp.uint32),
+        new_payload=jnp.ones((t, 1, 2), jnp.uint32),
+        cid=jnp.asarray(20 + np.arange(t), jnp.uint32))
+    ok, store2 = rsi.commit(store, txns)
+    assert int(np.array(ok).sum()) == 1
+    assert int(np.array(ok).argmax()) == 0          # priority order wins
+    assert int(store2["words"][0]) == 20
+
+
+def test_stale_read_aborts():
+    store = _mk_store(4, ncid=5)
+    txns = TxnBatch(write_recs=jnp.array([[2, -1]], jnp.int32),
+                    read_cids=jnp.array([[3, 0]], jnp.uint32),  # stale RID
+                    new_payload=jnp.ones((1, 2, 2), jnp.uint32),
+                    cid=jnp.array([9], jnp.uint32))
+    ok, store2 = rsi.commit(store, txns)
+    assert not bool(ok[0])
+    assert int(store2["words"][2]) == 5             # untouched
+
+
+def test_version_chain_and_snapshots():
+    store = _mk_store(2)
+    for step, cid in enumerate([7, 9]):
+        txns = TxnBatch(write_recs=jnp.array([[0]], jnp.int32),
+                        read_cids=jnp.array([[1 if step == 0 else 7]],
+                                            jnp.uint32),
+                        new_payload=jnp.full((1, 1, 2), cid, jnp.uint32),
+                        cid=jnp.array([cid], jnp.uint32))
+        ok, store = rsi.commit(store, txns)
+        assert bool(ok[0])
+    for rid, want in [(7, 7), (8, 7), (9, 9), (100, 9)]:
+        pay, cid, vis = rsi.read_snapshot(store, jnp.array([0]),
+                                          jnp.uint32(rid))
+        assert bool(vis[0]) and int(cid[0]) == want
+        assert int(pay[0, 0]) == want
+
+
+def test_bitvector_highest_committed():
+    bv = jnp.zeros((16,), bool)
+    assert int(rsi.highest_committed(bv)) == 0
+    bv = bv.at[jnp.array([0, 1, 2, 4])].set(True)
+    assert int(rsi.highest_committed(bv)) == 3   # gap at 3

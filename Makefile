@@ -1,0 +1,13 @@
+.PHONY: test bench bench-fig6 dev-deps
+
+test:            ## tier-1 suite (ROADMAP.md verify command)
+	PYTHONPATH=src python -m pytest -x -q
+
+bench:           ## all paper figures (CSV to stdout)
+	PYTHONPATH=src python -m benchmarks.run
+
+bench-fig6:      ## RSI message economics (fabric transport counters)
+	PYTHONPATH=src python -m benchmarks.run --only fig6
+
+dev-deps:        ## install test-only deps (pytest, hypothesis)
+	pip install -r requirements-dev.txt

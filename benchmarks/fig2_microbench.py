@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel, nam
+from repro import fabric
+from repro.core import costmodel
 
 
 def _timeit(f, *args, n=5):
@@ -35,11 +36,14 @@ def run():
     region = jnp.zeros((1 << 16, 16), jnp.float32)
     words = jnp.zeros((1 << 16,), jnp.uint32)
     idx = jnp.arange(256, dtype=jnp.int32)
-    rows.append(("fig2/nam_read_256rows",
-                 _timeit(jax.jit(nam.read), region, idx), ""))
-    rows.append(("fig2/nam_cas_256reqs",
-                 _timeit(jax.jit(nam.cas), words, idx,
+    rows.append(("fig2/fabric_read_256rows",
+                 _timeit(jax.jit(fabric.read), region, idx), ""))
+    rows.append(("fig2/fabric_cas_256reqs",
+                 _timeit(jax.jit(fabric.cas), words, idx,
                          jnp.zeros(256, jnp.uint32),
+                         jnp.ones(256, jnp.uint32)), ""))
+    rows.append(("fig2/fabric_fetch_add_256reqs",
+                 _timeit(jax.jit(fabric.fetch_add), words, idx,
                          jnp.ones(256, jnp.uint32)), ""))
     # modeled: paper's latency curves (1/2 RTT) per message size
     for size in (8, 256, 2048, 32768, 1 << 20):

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import shuffle
+from repro.fabric import MeshTransport
 
 
 def _rel(sel: float, n: int = 1 << 20):
@@ -29,7 +30,8 @@ def _rel(sel: float, n: int = 1 << 20):
 def run():
     rows = []
     mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
-    fns = {v: jax.jit(shuffle.make_distributed_join(mesh, "data", v))
+    transport = MeshTransport(mesh, "data")
+    fns = {v: jax.jit(shuffle.make_distributed_join(transport, v))
            for v in ("ghj", "ghj_bloom", "rdma_ghj", "rrj")}
     for sel in (0.25, 0.5, 0.75, 1.0):
         rk, rv, sk, sv = _rel(sel)

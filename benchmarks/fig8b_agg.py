@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation
+from repro.fabric import MeshTransport
 from repro.kernels import ops
 
 
@@ -18,13 +19,14 @@ def run():
     rows = []
     n = 1 << 20
     mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
+    transport = MeshTransport(mesh, "data")
     key = jax.random.PRNGKey(0)
     keys = jax.random.randint(key, (n,), 0, 1 << 30).astype(jnp.uint32)
     vals = jnp.ones((n,), jnp.uint32)
     for groups in (1, 64, 4096, 262_144):
         for name, mkf in (("dist_agg", aggregation.dist_agg),
                           ("rdma_agg", aggregation.rdma_agg)):
-            f = jax.jit(mkf(mesh, "data", groups))
+            f = jax.jit(mkf(transport, groups))
             r = f(keys, vals)
             t0 = time.perf_counter()
             for _ in range(3):

@@ -2,6 +2,12 @@
 NAM store under RSI (paper §4.3) — read 3 products, update 3 stocks, insert
 1 order + 3 orderlines; concurrent batches with CAS arbitration.
 
+The commit runs on the unified verb fabric: ``rsi.commit`` routes prepares
+and installs through ``fabric.route()`` over a transport, which counts every
+message and byte the protocol issues — printed at the end as the measured
+message economics (swap in ``MeshTransport(mesh, "data")`` for the sharded
+NAM deployment; the protocol code does not change).
+
   PYTHONPATH=src python examples/nam_oltp.py
 """
 import time
@@ -12,6 +18,7 @@ import numpy as np
 
 from repro.configs.paper_nam import OLTP
 from repro.core import rsi
+from repro.fabric import LocalTransport
 
 
 def main():
@@ -24,7 +31,8 @@ def main():
 
     key = jax.random.PRNGKey(0)
     T = 512               # concurrent checkout txns per wave
-    commit = jax.jit(rsi.commit)
+    transport = LocalTransport()
+    commit = jax.jit(lambda s, t: rsi.commit(s, t, transport=transport))
     next_cid = 2
     order_base = n_products
     total, committed = 0, 0
@@ -55,6 +63,10 @@ def main():
           f"(compute only; see benchmarks/fig6 for the network model)")
     hc = int(rsi.highest_committed(store['bitvec'][:16]))
     print(f"timestamp bitvector: highest consecutive committed = {hc}")
+    print("per-commit message economics (fabric transport counters):")
+    for verb, s in sorted(transport.stats().items()):
+        print(f"  {verb:>9}: {s['msgs']:>6} msgs  {s['bytes']:>9} B  "
+              f"({s['msgs'] / T:.2f} msgs/txn)")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,9 @@
 a few decode steps — all on CPU.
 
   PYTHONPATH=src python examples/quickstart.py [--arch glm4-9b]
+
+For the paper's database side — the one-sided verb fabric, RSI commit, and
+its measured message economics — see examples/nam_oltp.py and docs/fabric.md.
 """
 import argparse
 

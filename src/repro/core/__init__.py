@@ -1,7 +1,10 @@
 # The paper's primary contribution: the NAM architecture (storage/compute
-# decoupling, one-sided ops), the RSI commit protocol, and the RDMA-adapted
+# decoupling, one-sided verbs), the RSI commit protocol, and the RDMA-adapted
 # OLAP operators (radix shuffle joins, background-flush aggregation), plus
 # the network-aware cost model that drives the roofline/sharding decisions.
-from repro.core.nam import NamPool
+# The verb substrate itself lives in ``repro.fabric`` (see docs/fabric.md);
+# the protocols in this package compose against it.
+from repro.fabric import (LocalTransport, MeshTransport, NamPool, Region,
+                          route)
 
-__all__ = ["NamPool"]
+__all__ = ["NamPool", "Region", "LocalTransport", "MeshTransport", "route"]

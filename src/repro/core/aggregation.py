@@ -5,15 +5,17 @@ post-aggregate. Cost grows with #distinct keys (the union re-aggregates
 nodes x groups rows).
 
 RDMA-AGG (paper): cache-sized local pre-aggregation tables; overflow is
-*flushed in the background* to hash-partitioned owner shards (all_to_all
-while pre-aggregation continues), then parallel per-owner post-aggregation.
-More partitions than workers => robust to skew and high distinct counts.
+*flushed in the background* to hash-partitioned owner shards — here each
+chunk's pre-aggregated partition tables are requests routed through
+``fabric.route()`` (dest = owner shard, chunked exchange = the background
+flush) — then parallel per-owner post-aggregation.  More partitions than
+workers => robust to skew and high distinct counts.
+
+Both builders take a fabric transport (``LocalTransport`` for one-shard
+ground truth, ``MeshTransport(mesh, axis)`` for the real collectives).
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
 
@@ -36,55 +38,52 @@ def preagg_table(keys, vals, table_slots: int):
     return table
 
 
-def dist_agg(mesh, axis: str, num_groups: int):
+def dist_agg(transport, num_groups: int):
     """Classic hierarchical aggregation. Inputs sharded on axis 0.
     Returns f(keys, vals) -> dense (num_groups,) sums (group = key hash)."""
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
 
     def body(keys, vals):
         local = segment_sum_by_key(keys, vals, num_groups)    # phase 1
         # global union + post-aggregation on every node (paper: the union
         # output is #nodes x #groups rows)
-        return jax.lax.psum(local, axis)                      # phase 2
+        return transport.psum(local)                          # phase 2
 
-    return shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
-                     out_specs=P(), check_rep=False)
+    return lambda keys, vals: transport.run(body, (keys, vals),
+                                            out_reps=True)
 
 
-def rdma_agg(mesh, axis: str, num_groups: int, *, table_slots: int = 4096,
+def rdma_agg(transport, num_groups: int, *, table_slots: int = 4096,
              chunks: int = 4):
     """RDMA-optimized aggregation. Groups are hash-partitioned across shards
-    (owner = slot % n); overflow partitions stream to owners chunk-by-chunk
-    (background flush) and each owner post-aggregates only its slice."""
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
-
-    n = mesh.shape[axis]
+    (owner = slot // (groups/n)); each chunk pre-aggregates into per-owner
+    cache-sized tables which stream to their owners through the fabric
+    router (background flush = chunked exchange), and each owner
+    post-aggregates only its slice."""
+    n = transport.n
     assert num_groups % n == 0 or num_groups < n
 
     def body(keys, vals):
         gsz = max(num_groups // n, 1)
-        slot = (keys % jnp.uint32(num_groups)).astype(jnp.int32)
-        owner = jnp.minimum(slot // gsz, n - 1)
-        # phase 1: per-chunk cache-sized pre-aggregation into the owner
-        # layout, flushed (all_to_all) while the next chunk aggregates
         N = keys.shape[0]
+        # phase 1: per-chunk cache-sized pre-aggregation into the owner
+        # layout — one (n, gsz) partition table per chunk
         ck = keys.reshape(chunks, N // chunks)
         cv = vals.reshape(chunks, N // chunks)
-
-        def step(_, inp):
-            k, v = inp
-            s = (k % jnp.uint32(num_groups)).astype(jnp.int32)
-            o = jnp.minimum(s // gsz, n - 1)
-            part = jnp.zeros((n, gsz), jnp.uint64).at[o, s % gsz].add(
-                v.astype(jnp.uint64))
-            return None, jax.lax.all_to_all(part, axis, 0, 0, tiled=False)
-
-        _, flushed = jax.lax.scan(step, None, (ck, cv))
+        slot = (ck % jnp.uint32(num_groups)).astype(jnp.int32)
+        owner = jnp.minimum(slot // gsz, n - 1)
+        ci = jnp.broadcast_to(
+            jnp.arange(chunks, dtype=jnp.int32)[:, None], slot.shape)
+        part = jnp.zeros((chunks, n, gsz), jnp.uint64).at[
+            ci, owner, slot % gsz].add(cv.astype(jnp.uint64))
+        # background flush: route each chunk's n owner tables (dest = owner,
+        # cap = chunks, chunked exchange pipelines the transfer)
+        tabs = part.reshape(chunks * n, gsz)
+        dest = jnp.tile(jnp.arange(n, dtype=jnp.int32), chunks)
+        res = transport.route({"tab": tabs}, dest, cap=chunks, chunks=chunks)
         # phase 2: parallel post-aggregation of my slice only
-        mine = flushed.sum(axis=(0, 1))                      # (gsz,)
-        return jax.lax.all_gather(mine, axis, tiled=True)[:num_groups]
+        mine = jnp.sum(res.fields["tab"]
+                       * (res.valid > 0).astype(jnp.uint64)[:, None], axis=0)
+        return transport.all_gather(mine)[:num_groups]
 
-    return shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
-                     out_specs=P(), check_rep=False)
+    return lambda keys, vals: transport.run(body, (keys, vals),
+                                            out_reps=True)

@@ -2,7 +2,7 @@
 
 Store layout (paper Table 1): per record a 64-bit word = 1-bit lock | 63-bit
 CID, followed by n version slots (newest first). The client (= compute node)
-drives commit entirely with one-sided ops:
+drives commit entirely with one-sided verbs from ``repro.fabric``:
 
   msg 1: get CID from the client-partitioned timestamp bitvector (local slot)
   msg 2: validate+lock every write with a single CAS   (1 round trip)
@@ -11,21 +11,25 @@ drives commit entirely with one-sided ops:
 
 Abort path: losers release any locks they won (restore the old word).
 
-The JAX implementation commits a *batch* of concurrent transactions with
-deterministic CAS arbitration (see ``repro.core.nam.cas``) — semantically a
-serial schedule in priority order, which is what per-record atomic CAS gives
-the paper. ``commit_sharded`` routes prepare requests to home shards with the
-radix shuffle + all_to_all (1 round trip, like the RNIC CAS).
+There is ONE commit path: :func:`commit` routes prepare/install requests to
+home shards through ``fabric.route()`` (radix into fixed software-managed
+buffers + paired all_to_all) and arbitrates with the deterministic-priority
+CAS — semantically a serial schedule in priority order, which is what
+per-record atomic CAS gives the paper.  The transport decides the substrate:
+``LocalTransport()`` (default) is the single-shard degenerate case where the
+router never leaves the node; ``MeshTransport(mesh, axis)`` is the NAM
+deployment (store sharded by home shard, clients sharded alongside, one
+all_to_all per round trip).  Both count per-verb messages/bytes, which
+``benchmarks/fig6_rsi.py`` reports next to the paper's analytic model.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import nam
+from repro.fabric import LocalTransport
 
 # JAX runs with x64 disabled, so the paper's 1+63-bit word is realized
 # as 1-bit lock | 31-bit CID in uint32 (layout generalizes; the Pallas
@@ -79,59 +83,110 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
-def commit(store, txns: TxnBatch, priority=None):
-    """Commit a batch of concurrent transactions. Returns
-    (committed (T,) bool, new_store)."""
-    T, W = txns.write_recs.shape
-    recs = txns.write_recs.reshape(-1)
-    exp = (txns.read_cids & CID_MASK).reshape(-1)
-    new_word = LOCK_BIT | exp                     # lock, keep old CID
+def commit(store, txns: TxnBatch, *, transport=None, priority=None,
+           chunks: int = 1):
+    """Commit a batch of concurrent transactions over a fabric transport.
+    Returns (committed (T,) bool, new_store).
+
+    transport: fabric transport (default ``LocalTransport()``). Under
+      ``MeshTransport`` store leaves are sharded on axis 0 by home shard
+      (record r lives on shard r // (R/n)) and txns/priority are sharded on
+      axis 0 (each shard's clients); commit timestamps must be pre-assigned
+      in shard-contiguous bitvector ranges.
+    priority: (T,) int32 global arbitration order (lower wins; default =
+      global row order). Values must be globally unique across shards —
+      ties fall back to routed-buffer position, which favors lower peers.
+    chunks: pipeline the routed prepare/install buffers (selective
+      signaling); must divide T*W per shard.
+    """
+    if transport is None:
+        transport = LocalTransport()
+    T, _ = txns.write_recs.shape
     if priority is None:
         priority = jnp.arange(T, dtype=jnp.int32)
-    prio_flat = jnp.repeat(priority, W)
+    n = transport.n
 
-    # ---- phase 1: validate + lock (single CAS per record) [msg 2]
-    ok, words_locked = nam.cas(store["words"], recs, exp, new_word,
-                               priority=prio_flat)
-    ok = ok.reshape(T, W)
-    used = txns.write_recs >= 0
-    txn_ok = jnp.all(ok | ~used, axis=1) & jnp.any(used, axis=1)
+    def body(words, payload, cids, bitvec, wrecs, rcids, npay, cid, prio):
+        Tl, W = wrecs.shape
+        me = transport.shard_index()
+        r_local = words.shape[0]       # records per home shard (contiguous)
+        bv_local = bitvec.shape[0]
+        # ---- route prepares to home shards (radix by rec // r_local);
+        # unused write slots are filtered (dest = n), not dropped.
+        dest = jnp.where(wrecs >= 0, wrecs // r_local, n)
+        flat_dest = dest.reshape(-1)
+        cap = Tl * W  # worst case: all my writes hit one shard
+        gid = jnp.repeat(prio, W)      # globally unique txn priority
+        recs_flat = wrecs.reshape(-1)
+        exp_flat = (rcids & CID_MASK).reshape(-1)
+        cid_flat = jnp.repeat(cid & CID_MASK, W)
+        npay_flat = npay.reshape(Tl * W, -1)
+        # the CAS prepare is payload-free (paper msg 2): new CIDs and
+        # payloads stay client-side until the install round trip
+        req = {"rec": recs_flat, "exp": exp_flat, "prio": gid,
+               "slot": jnp.arange(Tl * W, dtype=jnp.int32)}
+        res = transport.route(req, flat_dest, cap=cap, chunks=chunks)
+        r, rvalid = res.fields, res.valid
+        # ---- local CAS arbitration on my records (global prio = fair)
+        lrec = jnp.where(rvalid > 0, r["rec"] % r_local, -1)  # local row
+        ok, words = transport.cas(words, lrec, r["exp"],
+                                  LOCK_BIT | r["exp"], priority=r["prio"])
+        # ---- grants return to requesters (paired reverse exchange lands
+        # each response in the slot it was sent from)
+        grant = transport.exchange(ok.astype(jnp.int32))
+        granted = jnp.zeros((Tl * W,), jnp.int32).at[res.sent["slot"]].add(
+            grant * res.sent_valid)
+        gmat = granted.reshape(Tl, W) > 0
+        used = wrecs >= 0
+        txn_ok = jnp.all(gmat | ~used, axis=1) & jnp.any(used, axis=1)
+        # ---- phase 2: installs routed the same way (write + unlock);
+        # committed txns install their CID, losers restore the old word.
+        commit_req = jnp.repeat(txn_ok, W) & (granted > 0)
+        release_req = (granted > 0) & ~commit_req
+        inst = {"rec": recs_flat,
+                "val": jnp.where(commit_req, cid_flat, exp_flat),
+                "npay": npay_flat,
+                "do_pay": commit_req.astype(jnp.int32)}
+        act = commit_req | release_req
+        res2 = transport.route(inst, jnp.where(act, flat_dest, n),
+                               cap=cap, chunks=chunks)
+        r2, v2 = res2.fields, res2.valid
+        lrec2 = jnp.where(v2 > 0, r2["rec"] % r_local, -1)
+        words = transport.write(words, lrec2, r2["val"])
+        # version install: shift slots left, newest at 0.
+        # NB: negative indices WRAP in jnp scatters — use an explicit OOB
+        # sentinel (row N) so mode="drop" actually drops skipped writes.
+        oob = payload.shape[0]
+        pay_idx = jnp.where((r2["do_pay"] > 0) & (v2 > 0), lrec2, -1)
+        idx_pay = jnp.where(pay_idx >= 0, pay_idx, oob)
+        if payload.shape[1] > 1:
+            shifted_pay = jnp.concatenate(
+                [payload[:, :1], payload[:, :-1]], axis=1)
+            shifted_cid = jnp.concatenate(
+                [cids[:, :1], cids[:, :-1]], axis=1)
+            has_commit = jnp.zeros((oob,), bool).at[idx_pay].set(
+                True, mode="drop")
+            payload = jnp.where(has_commit[:, None, None], shifted_pay,
+                                payload)
+            cids = jnp.where(has_commit[:, None], shifted_cid, cids)
+        payload = payload.at[idx_pay, 0].set(r2["npay"], mode="drop")
+        cids = cids.at[idx_pay, 0].set(r2["val"], mode="drop")
+        # ---- timestamp bitvector [msg 3, unsignaled]: clients flip their
+        # own (locally owned) bits; aborted txns also burn their slot (the
+        # paper's wrap/skip bookkeeping). cids are pre-assigned in shard-
+        # contiguous ranges [me*bv_local, ...).
+        cbit = cid.astype(jnp.int32) - me * bv_local
+        cbit = jnp.where((cbit >= 0) & (cbit < bv_local), cbit, bv_local)
+        bitvec = bitvec.at[cbit].set(True, mode="drop")
+        return txn_ok, words, payload, cids, bitvec
 
-    # ---- phase 2: install new versions + unlock [msg 3]; losers release
-    ok_flat = (ok & used).reshape(-1)
-    commit_flat = jnp.repeat(txn_ok, W) & ok_flat
-    release_flat = ok_flat & ~commit_flat
-    # committed: word = new CID (unlocked)
-    cid_flat = jnp.repeat(txns.cid & CID_MASK, W)
-    idx_commit = jnp.where(commit_flat, recs, -1)
-    words = nam.write(words_locked, idx_commit, cid_flat)
-    # released: restore old (unlocked) word
-    idx_rel = jnp.where(release_flat, recs, -1)
-    words = nam.write(words, idx_rel, exp)
-
-    # version install: shift slots left, newest at 0.
-    # NB: negative indices WRAP in jnp scatters — use an explicit OOB
-    # sentinel (row N) so mode="drop" actually drops skipped writes.
-    pay = store["payload"]
-    cids = store["cids"]
-    oob = pay.shape[0]
-    idx_pay = jnp.where(commit_flat, recs, oob)
-    if pay.shape[1] > 1:
-        shifted_pay = jnp.concatenate([pay[:, :1], pay[:, :-1]], axis=1)
-        shifted_cid = jnp.concatenate([cids[:, :1], cids[:, :-1]], axis=1)
-        has_commit = jnp.zeros((pay.shape[0],), bool).at[idx_pay].set(
-            True, mode="drop")
-        pay = jnp.where(has_commit[:, None, None], shifted_pay, pay)
-        cids = jnp.where(has_commit[:, None], shifted_cid, cids)
-    pay = pay.at[idx_pay, 0].set(txns.new_payload.reshape(T * W, -1),
-                                 mode="drop")
-    cids = cids.at[idx_pay, 0].set(cid_flat, mode="drop")
-
-    # ---- timestamp bitvector [msg 3, unsignaled]: aborted txns also burn
-    # their slot (the paper's wrap/skip bookkeeping).
-    bitvec = store["bitvec"].at[txns.cid.astype(jnp.int32)].set(True,
-                                                                mode="drop")
-    return txn_ok, {"words": words, "payload": pay, "cids": cids,
+    txn_ok, words, payload, cids, bitvec = transport.run(
+        body,
+        (store["words"], store["payload"], store["cids"], store["bitvec"],
+         txns.write_recs, txns.read_cids, txns.new_payload, txns.cid,
+         priority),
+        out_reps=(False, False, False, False, False))
+    return txn_ok, {"words": words, "payload": payload, "cids": cids,
                     "bitvec": bitvec}
 
 
@@ -146,119 +201,3 @@ def read_snapshot(store, recs, rid):
         store["payload"][recs], slot[..., None, None], axis=-2)[..., 0, :]
     cid = jnp.take_along_axis(cids, slot[..., None], axis=-1)[..., 0]
     return pay, cid, ok
-
-
-# ----------------------------------------------------------- sharded ------
-
-def commit_sharded(mesh, axis: str, store, txns: TxnBatch):
-    """NAM deployment: records live on their home shard
-    (record r -> shard r % n); clients (one batch per shard) route prepare
-    requests with one all_to_all (= the CAS round trip), home shards
-    arbitrate locally, grants return with the paired all_to_all.
-
-    store leaves are sharded on axis 0 by home shard; txns are sharded on
-    axis 0 (each shard's clients). Runs under shard_map.
-    """
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
-
-    n = mesh.shape[axis]
-
-    def body(words, payload, cids, bitvec, wrecs, rcids, npay, cid):
-        T, W = wrecs.shape
-        me = jax.lax.axis_index(axis)
-        r_local = words.shape[0]       # records per home shard (contiguous)
-        bv_local = bitvec.shape[0]
-        # ---- route requests to home shards (radix by rec // r_local)
-        dest = jnp.where(wrecs >= 0, wrecs // r_local, n)
-        flat_dest = dest.reshape(-1)
-        cap = T * W  # worst case: all my writes hit one shard
-        gid = (jnp.repeat(jnp.arange(T, dtype=jnp.int32), W) + me * T)
-        payload_req = {
-            "rec": wrecs.reshape(-1), "exp": (rcids & CID_MASK).reshape(-1),
-            "prio": gid, "slotid": jnp.arange(T * W, dtype=jnp.int32),
-            "cid": jnp.repeat(cid & CID_MASK, W),
-            "npay": npay.reshape(T * W, -1),
-        }
-        buf, meta, valid = _route(payload_req, flat_dest, n, cap)
-
-        def a2a(v):
-            return jax.lax.all_to_all(
-                v.reshape(n, cap, *v.shape[1:]), axis, 0, 0,
-                tiled=False).reshape(n * cap, *v.shape[1:])
-
-        r = {k: a2a(v) for k, v in meta.items()}
-        rvalid = a2a(valid)
-        # ---- local CAS arbitration on my records (global prio = fair)
-        lrec = jnp.where(rvalid > 0, r["rec"] % r_local, -1)  # local row
-        ok, words = nam.cas(words, lrec, r["exp"],
-                            LOCK_BIT | r["exp"], priority=r["prio"])
-        # ---- grants return to requesters
-        grant = a2a(ok.astype(jnp.int32))   # symmetric permutation returns
-        granted = jnp.zeros((T * W,), jnp.int32).at[meta_slot(meta)].add(
-            grant * (a2a(rvalid) > 0))
-        gmat = granted.reshape(T, W) > 0
-        used = wrecs >= 0
-        txn_ok = jnp.all(gmat | ~used, axis=1) & jnp.any(used, axis=1)
-        # ---- phase 2: installs routed the same way (write + unlock)
-        commit_req = jnp.repeat(txn_ok, W) & (granted > 0)
-        release_req = (granted > 0) & ~commit_req
-        inst = {"rec": payload_req["rec"],
-                "val": jnp.where(commit_req, payload_req["cid"],
-                                 payload_req["exp"]),
-                "npay": payload_req["npay"],
-                "do_pay": commit_req.astype(jnp.int32)}
-        act = commit_req | release_req
-        buf2, meta2, valid2 = _route(inst, jnp.where(act, flat_dest, n),
-                                     n, cap)
-        r2 = {k: a2a(v) for k, v in meta2.items()}
-        v2 = a2a(valid2)
-        lrec2 = jnp.where(v2 > 0, r2["rec"] % r_local, -1)
-        words = nam.write(words, lrec2, r2["val"])
-        pay_idx = jnp.where((r2["do_pay"] > 0) & (v2 > 0), lrec2, -1)
-        payload = payload.at[jnp.where(pay_idx >= 0, pay_idx,
-                                       payload.shape[0]), 0].set(
-            r2["npay"], mode="drop")
-        cids = cids.at[jnp.where(pay_idx >= 0, pay_idx, cids.shape[0]),
-                       0].set(r2["val"], mode="drop")
-        # clients flip their own (locally owned) timestamp bits: cids are
-        # pre-assigned in shard-contiguous ranges [me*bv_local, ...)
-        cbit = cid.astype(jnp.int32) - me * bv_local
-        cbit = jnp.where((cbit >= 0) & (cbit < bv_local), cbit, bv_local)
-        bitvec = bitvec.at[cbit].set(True, mode="drop")
-        return txn_ok, words, payload, cids, bitvec
-
-    f = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis),
-                  P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
-        check_rep=False)
-    txn_ok, words, payload, cids, bitvec = f(
-        store["words"], store["payload"], store["cids"], store["bitvec"],
-        txns.write_recs, txns.read_cids, txns.new_payload, txns.cid)
-    return txn_ok, {"words": words, "payload": payload, "cids": cids,
-                    "bitvec": bitvec}
-
-
-def meta_slot(meta):
-    return meta["slotid"]
-
-
-def _route(fields: dict, dest, n: int, cap: int):
-    """Radix-partition request fields into (n, cap) fixed buffers
-    (software-managed buffers, paper §5.2). Returns (None, routed, valid)."""
-    A = dest.shape[0]
-    order = jnp.argsort(dest, stable=True)
-    ds = dest[order]
-    first = jnp.searchsorted(ds, ds, side="left")
-    pos = jnp.arange(A, dtype=jnp.int32) - first.astype(jnp.int32)
-    keep = (pos < cap) & (ds < n)
-    slot = jnp.where(keep, ds * cap + pos, n * cap)
-    routed = {}
-    for k, v in fields.items():
-        buf = jnp.zeros((n * cap + 1,) + v.shape[1:], v.dtype)
-        routed[k] = buf.at[slot].set(v[order], mode="drop")[:-1]
-    valid = jnp.zeros((n * cap + 1,), jnp.int32).at[slot].set(
-        keep.astype(jnp.int32), mode="drop")[:-1]
-    return None, routed, valid

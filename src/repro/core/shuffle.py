@@ -2,22 +2,23 @@
 
 All four share the same local building blocks (radix partition + sort-probe
 join) so measured differences isolate the *shuffle strategy*, exactly like
-the paper's Fig 8(a). On a >1-shard mesh the shuffle is a real ``all_to_all``
-inside shard_map; the RDMA variants chunk the shuffle so XLA can overlap
-transfer with partitioning compute (selective signaling). The radix binning
-step is the jnp twin of ``repro.kernels.radix_partition``.
+the paper's Fig 8(a).  The shuffle itself is ``fabric.route()`` — the same
+radix-into-fixed-buffers + paired all_to_all router RSI commits through —
+driven by a pluggable transport: ``MeshTransport`` makes it a real
+``all_to_all`` inside shard_map, ``LocalTransport`` is the one-shard ground
+truth.  The RDMA variants set ``chunks > 1`` so XLA can overlap transfer
+with partitioning compute (selective signaling).  The radix binning step is
+the jnp twin of ``repro.kernels.radix_partition``.
 
 Relations are (keys, values) u32/u32; R is the (unique-key) build side.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
 from repro.core import bloom as bloom_mod
+
+MISS = jnp.uint32(0xFFFFFFFF)      # sentinel key: filtered / empty slot
 
 
 def radix_partition(keys, num_parts: int, *, bits_from: int = 0):
@@ -62,7 +63,7 @@ def ghj_local(rk, rv, sk, sv, *, num_parts: int = 32,
         bits = bloom_mod.build(rk, bloom_bits)
         keep = bloom_mod.query(bits, sk)
         # fixed-shape filter: drop misses by pointing them at a sentinel key
-        sk = jnp.where(keep, sk, jnp.uint32(0xFFFFFFFF))
+        sk = jnp.where(keep, sk, MISS)
     _, orderR, _ = radix_partition(rk, num_parts)
     _, orderS, _ = radix_partition(sk, num_parts)
     rk2, rv2 = _cache_blocks(rk[orderR], rv[orderR], num_parts)
@@ -82,73 +83,58 @@ def rrj_local(rk, rv, sk, sv, *, num_blocks: int = 64):
 
 # --------------------------------------------------------- distributed ----
 
-def _shuffle_by_key(keys, vals, axis: str, n: int, cap: int, chunks: int = 1):
-    """all_to_all shuffle of (keys, vals) to owner shard key % n.
-    chunks > 1 pipelines the shuffle (selective-signaling overlap)."""
-    N = keys.shape[0]
+def _route_by_key(transport, keys, vals, cap: int, chunks: int = 1):
+    """Shuffle (keys, vals) to owner shard ``key % n`` through the fabric
+    router; MISS keys are filtered, empty slots come back as MISS.
+    Returns (keys, vals, dropped) — dropped = rows lost to cap overflow."""
+    n = transport.n
     dest = (keys % jnp.uint32(n)).astype(jnp.int32)
-    dest = jnp.where(keys == jnp.uint32(0xFFFFFFFF), n, dest)  # filtered
-    order = jnp.argsort(dest, stable=True)
-    ds, ks, vs = dest[order], keys[order], vals[order]
-    first = jnp.searchsorted(ds, ds, side="left")
-    pos = jnp.arange(N, dtype=jnp.int32) - first.astype(jnp.int32)
-    keep = (pos < cap) & (ds < n)
-    slot = jnp.where(keep, ds * cap + pos, n * cap)
-    kbuf = jnp.full((n * cap + 1,), 0xFFFFFFFF, jnp.uint32
-                    ).at[slot].set(ks, mode="drop")[:-1]
-    vbuf = jnp.zeros((n * cap + 1,), vals.dtype).at[slot].set(
-        vs, mode="drop")[:-1]
-
-    def a2a(v):
-        return jax.lax.all_to_all(v.reshape(n, cap // chunks * chunks,
-                                            *v.shape[1:]), axis, 0, 0,
-                                  tiled=False).reshape(-1, *v.shape[1:])
-
-    if chunks == 1:
-        return a2a(kbuf), a2a(vbuf)
-    # pipelined: scan over chunks so transfer c overlaps binning of c+1
-    kc = kbuf.reshape(n, chunks, cap // chunks)
-    vc = vbuf.reshape(n, chunks, cap // chunks)
-
-    def step(_, inp):
-        k, v = inp
-        return None, (jax.lax.all_to_all(k, axis, 0, 0, tiled=False),
-                      jax.lax.all_to_all(v, axis, 0, 0, tiled=False))
-
-    _, (ko, vo) = jax.lax.scan(step, None,
-                               (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
-    return (jnp.moveaxis(ko, 0, 1).reshape(-1), jnp.moveaxis(vo, 0, 1).reshape(-1))
+    dest = jnp.where(keys == MISS, n, dest)        # filtered, not dropped
+    res = transport.route({"k": keys, "v": vals}, dest, cap=cap,
+                          chunks=chunks)
+    k = jnp.where(res.valid > 0, res.fields["k"], MISS)
+    return k, res.fields["v"], res.dropped
 
 
-def make_distributed_join(mesh, axis: str, variant: str, *,
+def make_distributed_join(transport, variant: str, *,
                           num_parts: int = 32, bloom_bits: int = 1 << 20,
-                          capacity_factor: float = 2.0):
+                          capacity_factor: float = 2.0,
+                          return_stats: bool = False):
     """variant in {ghj, ghj_bloom, rdma_ghj, rrj}. Returns f(rk, rv, sk, sv)
-    -> u64 join aggregate, where inputs are sharded on axis 0."""
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
+    -> u64 join aggregate, where inputs are sharded on axis 0 (under
+    ``MeshTransport``) or whole (under ``LocalTransport``).
 
-    n = mesh.shape[axis]
+    Capacity is ``capacity_factor/n`` of each relation per destination
+    shard; rows beyond it are dropped by the fixed buffers and the result
+    undercounts.  Pass ``return_stats=True`` to get (agg, dropped_rows) and
+    check the overflow counter — under heavy skew, raise capacity_factor.
+    """
+    n = transport.n
 
     def body(rk, rv, sk, sv):
         if variant == "ghj_bloom":
             # build local bloom over R keys, combine across shards (OR), then
             # filter S before shuffling (semi-join reduction §5.1.2)
             bits = bloom_mod.build(rk, bloom_bits)
-            bits = jax.lax.psum(bits.astype(jnp.int32), axis) > 0
+            bits = transport.psum(bits.astype(jnp.int32)) > 0
             keep = bloom_mod.query(bits, sk)
-            sk = jnp.where(keep, sk, jnp.uint32(0xFFFFFFFF))
+            sk = jnp.where(keep, sk, MISS)
         chunks = 4 if variant in ("rdma_ghj", "rrj") else 1
         cap_r = int(rk.shape[0] * capacity_factor / n) // chunks * chunks
         cap_s = int(sk.shape[0] * capacity_factor / n) // chunks * chunks
-        rk2, rv2 = _shuffle_by_key(rk, rv, axis, n, cap_r, chunks=chunks)
-        sk2, sv2 = _shuffle_by_key(sk, sv, axis, n, cap_s, chunks=chunks)
+        rk2, rv2, drop_r = _route_by_key(transport, rk, rv, cap_r,
+                                         chunks=chunks)
+        sk2, sv2, drop_s = _route_by_key(transport, sk, sv, cap_s,
+                                         chunks=chunks)
         if variant == "rrj":
             agg = rrj_local(rk2, rv2, sk2, sv2, num_blocks=num_parts)
         else:
             agg = ghj_local(rk2, rv2, sk2, sv2, num_parts=num_parts)
-        return jax.lax.psum(agg, axis)
+        return transport.psum(agg), transport.psum(drop_r + drop_s)
 
-    return shard_map(body, mesh=mesh,
-                     in_specs=(P(axis), P(axis), P(axis), P(axis)),
-                     out_specs=P(), check_rep=False)
+    def f(rk, rv, sk, sv):
+        agg, dropped = transport.run(body, (rk, rv, sk, sv),
+                                     out_reps=(True, True))
+        return (agg, dropped) if return_stats else agg
+
+    return f

@@ -6,8 +6,10 @@ prepare = validate+lock at the RM; commit = install+unlock), so we reuse the
 same arbitration. What differs — and what Fig 6 measures — is the *message
 economics*: a TM-coordinated protocol with two-sided messages whose CPU and
 bandwidth costs come from the §2 microbenchmarks. ``message_counts`` is the
-paper's §4.1.3 model; the fig6 benchmark combines it with measured per-txn
-compute time to reproduce the scaling curves.
+paper's §4.1.3 model; RSI's side of the comparison is *measured* by the
+fabric transport counters (see ``rsi.commit`` / ``benchmarks/fig6_rsi.py``),
+and fig6 combines both with measured per-txn compute time to reproduce the
+scaling curves.
 """
 from __future__ import annotations
 
@@ -16,9 +18,9 @@ from dataclasses import dataclass
 from repro.core import rsi
 
 
-def commit(store, txns, priority=None):
+def commit(store, txns, priority=None, transport=None):
     """2PC/SI commit of a txn batch via a TM: same schedule as RSI."""
-    return rsi.commit(store, txns, priority=priority)
+    return rsi.commit(store, txns, transport=transport, priority=priority)
 
 
 def message_counts(n_rm: int) -> dict:

@@ -1,9 +1,13 @@
 """Decentralized work-queue load balancing (paper §3.2).
 
 The paper proposes a central work queue accessed with one-sided verbs so idle
-nodes pull small portions of work — decentralized, straggler-proof. Host-side
-twin for the data pipeline and the trainer's straggler mitigation: a sharded
-deque per worker with lock-protected steal-from-the-back semantics.
+nodes pull small portions of work — decentralized, straggler-proof.  The
+device-side primitive for this is the fabric's FETCH_ADD verb: every worker
+atomically bumps the shared head counter to claim a ticket range, with no
+coordinator in the path (:func:`claim_ticket_ranges`).  The rest of this
+module is the host-side twin for the data pipeline and the trainer's
+straggler mitigation: a sharded deque per worker with lock-protected
+steal-from-the-back semantics (the READ+CAS steal analogue).
 """
 from __future__ import annotations
 
@@ -12,6 +16,25 @@ import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro import fabric
+
+
+def claim_ticket_ranges(head, amounts, priority=None):
+    """Claim work-item ranges off a shared queue head with one FETCH_ADD
+    per worker (paper §3.2's decentralized pull).
+
+    head: (1,) counter word (the queue's head pointer region).
+    amounts: (W,) per-worker claim sizes.
+    priority: (W,) int32 arbitration order (lower first; default = worker
+      order) — the same deterministic semantics as the fabric CAS.
+    Returns (starts (W,), new_head (1,)): worker w owns
+    [starts[w], starts[w] + amounts[w]).
+    """
+    idx = jnp.zeros(amounts.shape, jnp.int32)      # all hit word 0
+    return fabric.fetch_add(head, idx, amounts, priority=priority)
 
 
 @dataclass

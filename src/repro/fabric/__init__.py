@@ -1,0 +1,25 @@
+"""repro.fabric — the unified one-sided verb fabric (see docs/fabric.md).
+
+One RDMA-style substrate for every distributed protocol in the repo:
+
+  verbs      read / write / cas / fetch_add over named regions
+             (``NamPool`` allocates regions and binds shardings)
+  route()    the single radix-into-fixed-buffers request router with a
+             paired all_to_all and a ``chunks=`` pipelining knob
+  transports ``LocalTransport`` (one shard, no collectives) and
+             ``MeshTransport(mesh, axis)`` (shard_map + all_to_all), both
+             counting messages and bytes per verb
+
+RSI commit, all four join variants, and RDMA-AGG compose against this layer
+and nothing else — the paper's "redesign the system around the verbs".
+"""
+from repro.fabric.router import RouteResult, chunked_all_to_all, route
+from repro.fabric.transport import LocalTransport, MeshTransport, Transport
+from repro.fabric.verbs import (NamPool, Region, cas, fetch_add, read,
+                                write)
+
+__all__ = [
+    "NamPool", "Region", "read", "write", "cas", "fetch_add",
+    "route", "RouteResult", "chunked_all_to_all",
+    "Transport", "LocalTransport", "MeshTransport",
+]

@@ -1,0 +1,100 @@
+"""The single request router (paper §5.2 software-managed buffers).
+
+Every distributed protocol in the repo — RSI prepare/install, all four join
+shuffles, RDMA-AGG's background flush — is the same motion: radix-partition
+a batch of requests by destination shard into fixed ``(n, cap)`` buffers,
+then exchange buffers with the paired ``all_to_all``.  :func:`route` is that
+motion, written once:
+
+  * **fields** is an arbitrary pytree of per-request arrays (leading dim A);
+  * **dest** maps each request to a shard id; ``dest >= n`` (or negative)
+    means *filtered* (the request is intentionally not sent — e.g. Bloom
+    misses, unused txn write slots) and is **not** counted as a drop;
+  * requests beyond a destination's ``cap`` are **dropped** and counted in
+    ``RouteResult.dropped`` — fixed buffers are the paper's flow control, and
+    silent truncation would corrupt protocols, so the counter is surfaced;
+  * ``chunks > 1`` pipelines the exchange chunk-by-chunk (the paper's
+    selective-signaling overlap) via an internal scan.
+
+The exchange itself is injected by the transport (``None`` = stay local), so
+the same router serves a single shard and a shard_mapped mesh unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class RouteResult:
+    """Outcome of one routed batch.
+
+    fields:  pytree of (n*cap, ...) buffers *after* the exchange (receiver
+             view: slots [p*cap:(p+1)*cap] came from peer p).
+    valid:   (n*cap,) int32 occupancy mask, exchanged alongside the fields.
+    dropped: () int32 — local requests lost to capacity overflow (pre-
+             exchange; filtered dest >= n requests are not counted).
+    sent:        pytree of (n*cap, ...) buffers as *sent* (pre-exchange) —
+                 the return-path key: a paired reverse exchange delivers
+                 responses back to exactly these slots.
+    sent_valid:  (n*cap,) int32 occupancy of the sent buffers.
+    """
+    fields: Any
+    valid: jnp.ndarray
+    dropped: jnp.ndarray
+    sent: Any
+    sent_valid: jnp.ndarray
+
+
+def route(fields, dest, *, n: int, cap: int, chunks: int = 1,
+          exchange: Optional[Callable] = None) -> RouteResult:
+    """Radix-partition `fields` by `dest` into (n, cap) fixed buffers and
+    (optionally) exchange them. See module docstring for semantics."""
+    if cap % chunks != 0:
+        raise ValueError(f"cap={cap} not divisible by chunks={chunks}")
+    A = dest.shape[0]
+    dest = dest.astype(jnp.int32)
+    order = jnp.argsort(dest, stable=True)
+    ds = dest[order]
+    first = jnp.searchsorted(ds, ds, side="left")
+    pos = jnp.arange(A, dtype=jnp.int32) - first.astype(jnp.int32)
+    # dest outside [0, n) is filtered (negatives would WRAP in the scatter);
+    # only capacity overflow among deliverable requests counts as dropped.
+    deliverable = (ds >= 0) & (ds < n)
+    keep = (pos < cap) & deliverable
+    dropped = jnp.sum(((pos >= cap) & deliverable).astype(jnp.int32))
+    slot = jnp.where(keep, ds * cap + pos, n * cap)
+
+    def scatter(v):
+        buf = jnp.zeros((n * cap + 1,) + v.shape[1:], v.dtype)
+        return buf.at[slot].set(v[order], mode="drop")[:-1]
+
+    sent = jax.tree_util.tree_map(scatter, fields)
+    sent_valid = jnp.zeros((n * cap + 1,), jnp.int32).at[slot].set(
+        keep.astype(jnp.int32), mode="drop")[:-1]
+    if exchange is None:
+        return RouteResult(sent, sent_valid, dropped, sent, sent_valid)
+    recv = jax.tree_util.tree_map(exchange, sent)
+    valid = exchange(sent_valid)
+    return RouteResult(recv, valid, dropped, sent, sent_valid)
+
+
+def chunked_all_to_all(v, axis: str, n: int, cap: int, chunks: int = 1):
+    """Paired all_to_all of a (n*cap, ...) buffer; chunks > 1 pipelines the
+    transfer with a scan so chunk c's exchange overlaps chunk c+1's work."""
+    rest = v.shape[1:]
+    if chunks == 1:
+        return jax.lax.all_to_all(
+            v.reshape(n, cap, *rest), axis, 0, 0,
+            tiled=False).reshape(n * cap, *rest)
+    c = cap // chunks
+    vc = jnp.moveaxis(v.reshape(n, chunks, c, *rest), 1, 0)
+
+    def step(_, x):
+        return None, jax.lax.all_to_all(x, axis, 0, 0, tiled=False)
+
+    _, out = jax.lax.scan(step, None, vc)
+    return jnp.moveaxis(out, 0, 1).reshape(n * cap, *rest)

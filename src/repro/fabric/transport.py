@@ -1,0 +1,209 @@
+"""Pluggable transports: where the verbs and the router actually run.
+
+A transport binds the verb layer (``repro.fabric.verbs``) and the request
+router (``repro.fabric.route``) to an execution substrate:
+
+  * :class:`LocalTransport` — one shard, no collectives.  ``route`` stays a
+    local radix partition, ``exchange``/``psum``/``all_gather`` are
+    identities.  This is the single-node degenerate case of the NAM
+    architecture, useful for ground truth and for measuring the pure
+    compute path.
+  * :class:`MeshTransport` — the NAM deployment: protocol bodies run under
+    ``shard_map`` over a named mesh axis, ``route`` pairs the radix
+    partition with a (chunkable) ``all_to_all``, and ``psum`` /
+    ``all_gather`` are the real collectives.
+
+Every transport **counts messages and bytes per verb** (read / write / cas /
+fetch_add / route / exchange / psum / all_gather).  Counting happens at
+trace time — economics depend only on static shapes, so each traced
+(logical) execution accumulates exactly once; benchmarks report the
+resulting per-call counts next to the paper's analytic model.  Because a
+cached jit never re-traces, ``reset_stats()`` followed by a call to an
+already-compiled function records nothing — use a fresh transport (and
+re-jit) per experiment.
+
+Counter semantics: these are **capacity counts** — the fixed-buffer wire
+reservations of the paper's software-managed-buffer design, not occupancy.
+``route``/``exchange`` bytes are exact (a fixed (n, cap) buffer travels in
+full regardless of fill); verb msgs count every buffer slot handed to the
+verb, which is exact under ``LocalTransport`` (cap = batch size) and an
+upper bound per shard under ``MeshTransport`` (each home shard scans its
+full n*cap receive buffer).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.fabric import router as _router
+from repro.fabric import verbs as _verbs
+
+
+def _row_bytes(arr) -> int:
+    return math.prod(arr.shape[1:]) * arr.dtype.itemsize
+
+
+class Transport:
+    """Base transport: verb dispatch + trace-time message/byte accounting."""
+
+    axis: Optional[str] = None
+
+    def __init__(self):
+        self._stats: dict = {}
+
+    # ------------------------------------------------------ accounting ---
+
+    def _count(self, verb: str, msgs: int, nbytes: int):
+        s = self._stats.setdefault(verb, {"calls": 0, "msgs": 0, "bytes": 0})
+        s["calls"] += 1
+        s["msgs"] += int(msgs)
+        s["bytes"] += int(nbytes)
+
+    def stats(self) -> dict:
+        """{verb: {calls, msgs, bytes}} accumulated since reset."""
+        return {k: dict(v) for k, v in self._stats.items()}
+
+    def reset_stats(self):
+        self._stats = {}
+
+    # ----------------------------------------------------------- verbs ---
+
+    def read(self, region_arr, idx):
+        self._count("read", idx.size, idx.size * _row_bytes(region_arr))
+        return _verbs.read(region_arr, idx)
+
+    def write(self, region_arr, idx, values):
+        self._count("write", idx.size, values.size * values.dtype.itemsize)
+        return _verbs.write(region_arr, idx, values)
+
+    def cas(self, words, idx, expected, new, priority=None):
+        self._count("cas", idx.size,
+                    idx.size * (expected.dtype.itemsize + new.dtype.itemsize))
+        return _verbs.cas(words, idx, expected, new, priority=priority)
+
+    def fetch_add(self, words, idx, delta, priority=None):
+        self._count("fetch_add", idx.size, idx.size * delta.dtype.itemsize)
+        return _verbs.fetch_add(words, idx, delta, priority=priority)
+
+    # ---------------------------------------------------------- router ---
+
+    def route(self, fields, dest, *, cap: int, chunks: int = 1):
+        """Radix-route a request pytree into (n, cap) buffers and exchange
+        them with the peers (see ``repro.fabric.route``)."""
+        n = self.n
+        leaves = jax.tree_util.tree_leaves(fields)
+        nbytes = sum(n * cap * _row_bytes(l) for l in leaves
+                     ) + n * cap * 4  # + the valid mask
+        self._count("route", (len(leaves) + 1) * n * chunks, nbytes)
+        return _router.route(fields, dest, n=n, cap=cap, chunks=chunks,
+                             exchange=self._make_exchange(cap, chunks))
+
+    # ------------------------------------------------ substrate hooks ----
+
+    @property
+    def n(self) -> int:
+        raise NotImplementedError
+
+    def _make_exchange(self, cap: int, chunks: int):
+        """Exchange callable handed to the router (None = stay local)."""
+        raise NotImplementedError
+
+    def run(self, body, args, out_reps):
+        """Execute a per-shard protocol body over sharded args.  out_reps:
+        bool (single output) or tuple of bool — True = replicated output."""
+        raise NotImplementedError
+
+    def shard_index(self):
+        raise NotImplementedError
+
+    def psum(self, x):
+        raise NotImplementedError
+
+    def all_gather(self, x):
+        raise NotImplementedError
+
+    def exchange(self, v, chunks: int = 1):
+        """Paired reverse exchange of a (n*cap, ...) buffer — the response
+        return path for routed requests."""
+        raise NotImplementedError
+
+
+class LocalTransport(Transport):
+    """Single shard: the router partitions locally, collectives are
+    identities. All counters still accumulate (loopback traffic), so the
+    measured message economics stay comparable with a MeshTransport run."""
+
+    @property
+    def n(self) -> int:
+        return 1
+
+    def _make_exchange(self, cap, chunks):
+        return None
+
+    def run(self, body, args, out_reps):
+        return body(*args)
+
+    def shard_index(self):
+        return jnp.int32(0)
+
+    def psum(self, x):
+        self._count("psum", 1, x.size * x.dtype.itemsize)
+        return x
+
+    def all_gather(self, x):
+        self._count("all_gather", 1, x.size * x.dtype.itemsize)
+        return x
+
+    def exchange(self, v, chunks: int = 1):
+        self._count("exchange", chunks, v.size * v.dtype.itemsize)
+        return v
+
+
+class MeshTransport(Transport):
+    """NAM deployment over a mesh axis: bodies run under shard_map, routed
+    buffers travel on the paired (chunkable) all_to_all."""
+
+    def __init__(self, mesh, axis: str):
+        super().__init__()
+        self.mesh = mesh
+        self.axis = axis
+
+    @property
+    def n(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def _make_exchange(self, cap, chunks):
+        n, axis = self.n, self.axis
+        return lambda v: _router.chunked_all_to_all(v, axis, n, cap, chunks)
+
+    def run(self, body, args, out_reps):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        in_specs = tuple(P(self.axis) for _ in args)
+        if isinstance(out_reps, bool):
+            out_specs = P() if out_reps else P(self.axis)
+        else:
+            out_specs = tuple(P() if r else P(self.axis) for r in out_reps)
+        return shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)(*args)
+
+    def shard_index(self):
+        return jax.lax.axis_index(self.axis)
+
+    def psum(self, x):
+        self._count("psum", self.n, x.size * x.dtype.itemsize)
+        return jax.lax.psum(x, self.axis)
+
+    def all_gather(self, x):
+        self._count("all_gather", self.n,
+                    self.n * x.size * x.dtype.itemsize)
+        return jax.lax.all_gather(x, self.axis, tiled=True)
+
+    def exchange(self, v, chunks: int = 1):
+        cap = v.shape[0] // self.n
+        self._count("exchange", self.n * chunks,
+                    v.size * v.dtype.itemsize)
+        return _router.chunked_all_to_all(v, self.axis, self.n, cap, chunks)

@@ -1,24 +1,27 @@
-"""Network-Attached Memory pool (§3.1.4).
+"""One-sided verbs over named regions (paper §3.1.4).
 
-A NamPool is a registry of named *regions* — logically global arrays that live
-sharded across the mesh (storage side) and are accessed by compute through
-one-sided-style operations:
+The paper's thesis is that a single small set of one-sided RDMA verbs —
+READ / WRITE / CAS / FETCH_ADD over software-managed buffers — is enough to
+rebuild OLTP (RSI), OLAP (radix joins, aggregation) and analytics.  This
+module is that substrate's data plane: four verbs with identical OOB and
+priority semantics, plus the :class:`NamPool` factory that allocates named
+regions and binds their shardings.
 
-  read(idx)        — RDMA READ:   row gather (cross-shard under GSPMD)
-  write(idx, v)    — RDMA WRITE:  row scatter
-  cas(idx, exp, new) — RDMA CAS:  vectorized compare-and-swap with
-                     deterministic arbitration (home-shard semantics: among
-                     concurrent CASes to one word, exactly the
-                     highest-priority matching request wins)
+Verb semantics (shared across all four):
 
-Storage nodes are "dumb" (no region-specific logic); all protocol logic (RSI,
-joins) lives client-side in ``repro.core.rsi`` / ``repro.core.shuffle``.
-Compute/storage co-location is just a sharding choice, per the paper.
+  * indices are row indices into a region array; **negative index = no-op**
+    (READ returns zeros, WRITE/CAS/FETCH_ADD drop the request),
+  * concurrent requests to the same word are arbitrated **deterministically
+    by priority** (lower wins; default = request order) — semantically a
+    serial schedule, which is what the RNIC's per-word atomicity gives the
+    paper,
+  * storage nodes are "dumb": no region-specific logic lives here.  All
+    protocol logic (RSI, joins, aggregation) composes these verbs client
+    side via ``repro.fabric.transport``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +37,9 @@ class Region:
 
 @dataclass
 class NamPool:
+    """Factory for named regions: allocates logical arrays and binds their
+    shardings (compute/storage co-location is just a sharding choice)."""
+
     regions: dict = field(default_factory=dict)
 
     def alloc(self, name: str, shape, dtype, logical_axes=None) -> Region:
@@ -57,7 +63,7 @@ class NamPool:
                 for n, r in self.regions.items()}
 
 
-# ------------------------------------------------ one-sided style ops -----
+# ------------------------------------------------------------- verbs -----
 
 def read(region_arr, idx):
     """One-sided READ of rows `idx`. OOB (negative) -> zeros."""
@@ -78,7 +84,7 @@ def cas(words, idx, expected, new, priority=None):
     """Vectorized multi-request compare-and-swap with deterministic
     arbitration (the TPU adaptation of the RNIC's atomic CAS).
 
-    words: (R,) uint64 — lock|CID words.
+    words: (R,) lock|CID words.
     idx/expected/new: (A,) requests; idx may repeat (conflicts).
     priority: (A,) int32 — lower wins ties (default: request order).
     Returns (success (A,) bool, new_words (R,)).
@@ -106,6 +112,45 @@ def cas(words, idx, expected, new, priority=None):
         new_s, mode="drop")
     ok = jnp.zeros((A,), bool).at[order].set(ok_s)
     return ok, new_words
+
+
+def fetch_add(words, idx, delta, priority=None):
+    """Vectorized multi-request atomic FETCH_ADD with the same deterministic
+    arbitration as :func:`cas`.
+
+    words: (R,) counter words.
+    idx/delta: (A,) requests; idx may repeat (the decentralized work-queue
+    head counter is exactly this: every worker FETCH_ADDs the same word).
+    priority: (A,) int32 — lower goes first (default: request order).
+    Returns (fetched (A,), new_words (R,)).
+
+    Semantics = sequential execution in priority order: request i fetches
+    the word value *after* every higher-priority request to the same word
+    has applied its delta.  Unlike CAS, every in-bounds request succeeds
+    (addition commutes, so there is no failure path); OOB (negative idx)
+    requests fetch 0 and add nothing.
+    """
+    A = idx.shape[0]
+    if priority is None:
+        priority = jnp.arange(A, dtype=jnp.int32)
+    order = jnp.argsort(priority, stable=True)
+    idx_s, d_s = idx[order], delta[order]
+    valid_s = idx_s >= 0
+    d_eff = jnp.where(valid_s, d_s, jnp.zeros_like(d_s))
+    # group by word (stable, so priority order survives within a group) and
+    # take the exclusive per-segment prefix sum: what landed before me.
+    order2 = jnp.argsort(idx_s, stable=True)
+    idx2, d2 = idx_s[order2], d_eff[order2]
+    ex = jnp.cumsum(d2) - d2
+    first = jnp.searchsorted(idx2, idx2, side="left")
+    seg_ex = (ex - ex[first]).astype(words.dtype)
+    old2 = words[jnp.maximum(idx2, 0)] + seg_ex
+    old_s = jnp.zeros_like(old2).at[order2].set(old2)
+    fetched = jnp.zeros_like(old_s).at[order].set(
+        jnp.where(valid_s, old_s, jnp.zeros_like(old_s)))
+    new_words = words.at[jnp.where(idx >= 0, idx, words.shape[0])].add(
+        delta, mode="drop")
+    return fetched, new_words
 
 
 def _is_first_occurrence(x):

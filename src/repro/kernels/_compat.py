@@ -1,0 +1,11 @@
+"""Pallas API compat: jax renamed TPUCompilerParams -> CompilerParams
+around 0.5; support both so the kernels run on the baked-in toolchain."""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this pallas version is unsupported — update "
+        "src/repro/kernels/_compat.py for its API.")

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 LOCK_BIT_32 = jnp.uint32(1 << 31)
 
 
@@ -71,7 +73,7 @@ def cas_lock(words, idx, expected, *, block_n: int = 256,
             jax.ShapeDtypeStruct((r,), jnp.uint32),
             jax.ShapeDtypeStruct((a,), jnp.bool_),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(idx, expected, words)

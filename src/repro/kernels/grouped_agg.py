@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _kernel(slot_ref, val_ref, table_ref, acc_sc, *, slots, bn):
     j = pl.program_id(0)
@@ -52,7 +54,7 @@ def grouped_agg(slot, vals, num_slots: int, *, block_n: int = 512,
         out_specs=pl.BlockSpec((num_slots,), lambda j: (0,)),
         out_shape=jax.ShapeDtypeStruct((num_slots,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((num_slots,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(slot, vals)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _kernel(bucket_ref, vals_ref, out_ref, count_ref, cnt_sm, *, cap, bn):
     p = pl.program_id(0)
@@ -70,7 +72,7 @@ def radix_partition(vals, bucket, num_buckets: int, cap: int,
             jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
         ],
         scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(bucket, vals)

@@ -1,7 +1,7 @@
 """Serving engine: continuous batching over a NAM-resident KV pool.
 
 Decode slots form a shared pool; slot allocation goes through the RSI
-lock-word CAS (repro.core.nam.cas) — the same validate+lock primitive the
+lock-word CAS (repro.fabric.cas) — the same validate+lock primitive the
 paper uses for transactions arbitrates concurrent slot claims, so any
 frontend ("client" in NAM terms) can claim capacity without a coordinator.
 
@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import nam
+from repro import fabric
 from repro.models import api
 
 
@@ -51,7 +51,7 @@ class ServeEngine:
         """Claim up to n free slots via CAS on the lock words (one-sided)."""
         idx = jnp.arange(self.slots, dtype=jnp.int32)
         expected = jnp.zeros((self.slots,), jnp.uint32)
-        ok, words = nam.cas(self.slot_words, idx, expected,
+        ok, words = fabric.cas(self.slot_words, idx, expected,
                             jnp.full((self.slots,), 1 << 31, jnp.uint32))
         free = [int(i) for i in np.nonzero(np.array(ok))[0][:n]]
         keep = np.zeros(self.slots, bool)

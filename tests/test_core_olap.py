@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import aggregation, bloom, costmodel, shuffle
+from repro.fabric import LocalTransport, MeshTransport
 
 
 @pytest.fixture(scope="module")
@@ -31,9 +32,10 @@ def test_local_join_variants_agree(rel):
 def test_distributed_join_one_shard(rel):
     rk, rv, sk, sv, expect = rel
     mesh = jax.make_mesh((1,), ("data",))
-    for variant in ("ghj", "ghj_bloom", "rdma_ghj", "rrj"):
-        f = shuffle.make_distributed_join(mesh, "data", variant)
-        assert int(f(rk, rv, sk, sv)) == expect, variant
+    for transport in (LocalTransport(), MeshTransport(mesh, "data")):
+        for variant in ("ghj", "ghj_bloom", "rdma_ghj", "rrj"):
+            f = shuffle.make_distributed_join(transport, variant)
+            assert int(f(rk, rv, sk, sv)) == expect, (transport, variant)
 
 
 def test_bloom_no_false_negatives():
@@ -48,13 +50,15 @@ def test_bloom_no_false_negatives():
 def test_aggregation_schemes_agree():
     key = jax.random.PRNGKey(1)
     mesh = jax.make_mesh((1,), ("data",))
-    for groups in (4, 64, 512):
-        keys = jax.random.randint(key, (4096,), 0, 100_000).astype(jnp.uint32)
-        vals = jnp.ones((4096,), jnp.uint32)
-        a = aggregation.dist_agg(mesh, "data", groups)(keys, vals)
-        b = aggregation.rdma_agg(mesh, "data", groups)(keys, vals)
-        np.testing.assert_array_equal(np.array(a), np.array(b))
-        assert int(np.array(a).sum()) == 4096
+    for transport in (LocalTransport(), MeshTransport(mesh, "data")):
+        for groups in (4, 64, 512):
+            keys = jax.random.randint(key, (4096,), 0, 100_000
+                                      ).astype(jnp.uint32)
+            vals = jnp.ones((4096,), jnp.uint32)
+            a = aggregation.dist_agg(transport, groups)(keys, vals)
+            b = aggregation.rdma_agg(transport, groups)(keys, vals)
+            np.testing.assert_array_equal(np.array(a), np.array(b))
+            assert int(np.array(a).sum()) == 4096
 
 
 def test_fig7_crossovers():

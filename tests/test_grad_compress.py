@@ -3,6 +3,9 @@ wire-size accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.train import grad_compress as gc

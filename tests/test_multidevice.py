@@ -2,7 +2,7 @@
 main test session keeps 1 device, per the dry-run isolation rule):
 
   - MoE RRJ shard_map dispatch == reference loop-over-experts
-  - RSI commit_sharded == local commit
+  - RSI commit over MeshTransport == local commit
   - distributed joins/aggregation across 4 shards == 1-shard ground truth
   - reduced-config train_step lowers+compiles on a (2, 4) mesh
 """
@@ -54,6 +54,7 @@ if mode == "moe":
 elif mode == "rsi":
     from repro.core import rsi
     from repro.core.rsi import StoreCfg, TxnBatch
+    from repro.fabric import MeshTransport
     nrec, nsh = 32, 8
     mesh = jax.make_mesh((nsh,), ("data",))
     cfg = StoreCfg(num_records=nrec, payload_words=2, version_slots=1,
@@ -71,7 +72,8 @@ elif mode == "rsi":
         cid=jnp.asarray(8 * np.arange(T) + 70, jnp.uint32))
     ok_local, st_local = rsi.commit(store, txns)
     with mesh:
-        ok_sh, st_sh = rsi.commit_sharded(mesh, "data", store, txns)
+        ok_sh, st_sh = rsi.commit(store, txns,
+                                  transport=MeshTransport(mesh, "data"))
     np.testing.assert_array_equal(np.array(ok_sh), np.array(ok_local))
     np.testing.assert_array_equal(np.array(st_sh["words"]),
                                   np.array(st_local["words"]))
@@ -79,8 +81,9 @@ elif mode == "rsi":
 
 elif mode == "olap":
     from repro.core import shuffle, aggregation
+    from repro.fabric import MeshTransport
     mesh4 = jax.make_mesh((4,), ("data",))
-    mesh1 = jax.make_mesh((1, 4)[:1], ("data",))
+    tp4 = MeshTransport(mesh4, "data")
     key = jax.random.PRNGKey(0)
     rk = jax.random.permutation(key, jnp.arange(1, 2049, dtype=jnp.uint32))
     rv = rk * 3
@@ -90,13 +93,13 @@ elif mode == "olap":
     hit = np.array(sk) <= 2048
     expect = int(np.sum(np.where(hit, np.array(sk) * 3 * 2, 0)))
     for variant in ("ghj", "ghj_bloom", "rdma_ghj", "rrj"):
-        f = shuffle.make_distributed_join(mesh4, "data", variant)
+        f = shuffle.make_distributed_join(tp4, variant)
         got = int(f(rk, rv, sk, sv))
         assert got == expect, (variant, got, expect)
     keys = jax.random.randint(key, (4096,), 0, 10_000).astype(jnp.uint32)
     vals = jnp.ones((4096,), jnp.uint32)
-    a = aggregation.dist_agg(mesh4, "data", 64)(keys, vals)
-    b = aggregation.rdma_agg(mesh4, "data", 64)(keys, vals)
+    a = aggregation.dist_agg(tp4, 64)(keys, vals)
+    b = aggregation.rdma_agg(tp4, 64)(keys, vals)
     np.testing.assert_array_equal(np.array(a), np.array(b))
     print("OLAP_PARITY_OK")
 

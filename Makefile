@@ -1,10 +1,16 @@
-.PHONY: test bench bench-fig6 dev-deps
+.PHONY: test test-fast bench bench-fig6 bench-json dev-deps
 
 test:            ## tier-1 suite (ROADMAP.md verify command)
 	PYTHONPATH=src python -m pytest -x -q
 
+test-fast:       ## tier-1 minus @pytest.mark.slow (multidevice/system)
+	PYTHONPATH=src python -m pytest -x -q -m "not slow"
+
 bench:           ## all paper figures (CSV to stdout)
 	PYTHONPATH=src python -m benchmarks.run
+
+bench-json:      ## all figures + BENCH_<figure>.json result files
+	PYTHONPATH=src python -m benchmarks.run --json .
 
 bench-fig6:      ## RSI message economics (fabric transport counters)
 	PYTHONPATH=src python -m benchmarks.run --only fig6

@@ -92,4 +92,4 @@ def run():
     c = model_curves(70)
     assert c["nam_rsi"] > c["sm_2sided"] > c["sn_ipoeth"] > 0
     rows.append(("fig6/ordering_nam>2sided>ipoeth", 0.0, "holds"))
-    return rows
+    return rows, {"fabric": stats}

@@ -1,17 +1,19 @@
 """Fig 8(a): measured join runtimes — GHJ / GHJ+Red / RDMA-GHJ / RRJ over
-bloom selectivities {0.25, 0.5, 0.75, 1.0}.
+bloom selectivities {0.25, 0.5, 0.75, 1.0}, through the ``repro.db`` facade.
 
-|R|=|S| scaled to 2^20/node for the CPU container (paper: 128M/node); the
-four variants share identical local join code so the deltas isolate the
+|R|=|S| scaled to 2^20/node for the CPU container (paper: 128M/node).  The
+query is ONE logical plan — ``scan(R).join(scan(S).filter(sel)).aggregate``
+— the network-aware planner picks a variant from the §5.1 cost model (one
+row per selectivity reports its choice), and the figure's grid then *forces*
+each of the four variants so the measured deltas isolate the
 shuffle/partition strategy, as in the paper.
 """
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import shuffle
+from repro.db import JOIN_VARIANTS, Database
 from repro.fabric import MeshTransport
 
 
@@ -29,22 +31,30 @@ def _rel(sel: float, n: int = 1 << 20):
 
 def run():
     rows = []
+    n = 1 << 20
     mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
-    transport = MeshTransport(mesh, "data")
-    fns = {v: jax.jit(shuffle.make_distributed_join(transport, v))
-           for v in ("ghj", "ghj_bloom", "rdma_ghj", "rrj")}
+    db = Database(transport=MeshTransport(mesh, "data"))
+    db.create_table("R", n, payload_words=1, partitioning="hash")
+    db.create_table("S", n, payload_words=1, partitioning="hash")
     for sel in (0.25, 0.5, 0.75, 1.0):
         rk, rv, sk, sv = _rel(sel)
+        db.table("R").load(rk, rv)
+        db.table("S").load(sk, sv)
+        q = db.scan("R").join(db.scan("S").filter(sel=sel)).aggregate()
+        ex = db.explain(q)
+        costs = "|".join(f"{a.name}:{a.cost_s * 1e3:.1f}ms"
+                         for a in ex.alternatives)
+        rows.append((f"fig8a/sel{sel}_planner", 0.0,
+                     f"picked_{ex.chosen}_{costs}"))
         base = None
-        for name, f in fns.items():
-            r = f(rk, rv, sk, sv)       # warm/compile
+        for name in JOIN_VARIANTS:              # forced grid for the figure
+            r = db.execute(q, force_variant=name)   # warm/compile
             t0 = time.perf_counter()
             for _ in range(3):
-                r = f(rk, rv, sk, sv)
-            jax.block_until_ready(r)
+                r = db.execute(q, force_variant=name)
             us = (time.perf_counter() - t0) / 3 * 1e6
             if name == "ghj":
                 base = us
             rows.append((f"fig8a/sel{sel}_{name}", us,
                          f"{base/us:.2f}x_vs_GHJ" if base else ""))
-    return rows
+    return rows, {"fabric": db.fabric_stats()}

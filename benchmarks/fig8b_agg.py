@@ -1,16 +1,20 @@
 """Fig 8(b): aggregation — hierarchical Dist-AGG vs RDMA-AGG over distinct
-group counts (paper sweeps 1 -> 64M; scaled to the CPU container).
+group counts (paper sweeps 1 -> 64M; scaled to the CPU container), through
+the ``repro.db`` facade.
 
 Claim reproduced: Dist-AGG cost grows with #groups (the global union is
 #nodes x #groups rows); RDMA-AGG stays flat-ish (owner-partitioned
-post-aggregation). Also times the Pallas grouped_agg pre-aggregation kernel.
+post-aggregation).  The query is ONE logical plan —
+``scan(T).aggregate(groups=G)`` — the planner reports its §5.3 cost-model
+choice per group count, then the figure's grid forces both schemes.  Also
+times the Pallas grouped_agg pre-aggregation kernel.
 """
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation
+from repro.db import AGG_VARIANTS, Database
 from repro.fabric import MeshTransport
 from repro.kernels import ops
 
@@ -19,19 +23,23 @@ def run():
     rows = []
     n = 1 << 20
     mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
-    transport = MeshTransport(mesh, "data")
+    db = Database(transport=MeshTransport(mesh, "data"))
     key = jax.random.PRNGKey(0)
     keys = jax.random.randint(key, (n,), 0, 1 << 30).astype(jnp.uint32)
     vals = jnp.ones((n,), jnp.uint32)
+    db.load_table("T", keys, vals)
     for groups in (1, 64, 4096, 262_144):
-        for name, mkf in (("dist_agg", aggregation.dist_agg),
-                          ("rdma_agg", aggregation.rdma_agg)):
-            f = jax.jit(mkf(transport, groups))
-            r = f(keys, vals)
+        q = db.scan("T").aggregate(groups=groups)
+        ex = db.explain(q)
+        costs = "|".join(f"{a.name}:{a.cost_s * 1e3:.1f}ms"
+                         for a in ex.alternatives)
+        rows.append((f"fig8b/groups{groups}_planner", 0.0,
+                     f"picked_{ex.chosen}_{costs}"))
+        for name in AGG_VARIANTS:               # forced grid for the figure
+            r = db.execute(q, force_variant=name)   # warm/compile
             t0 = time.perf_counter()
             for _ in range(3):
-                r = f(keys, vals)
-            jax.block_until_ready(r)
+                r = db.execute(q, force_variant=name)
             us = (time.perf_counter() - t0) / 3 * 1e6
             rows.append((f"fig8b/groups{groups}_{name}", us, ""))
     # kernel-level pre-aggregation (phase 1 hot loop)
@@ -43,4 +51,4 @@ def run():
     jax.block_until_ready(r)
     rows.append(("fig8b/kernel_grouped_agg_1M_2048slots",
                  (time.perf_counter() - t0) * 1e6, "interpret_mode"))
-    return rows
+    return rows, {"fabric": db.fabric_stats()}

@@ -1,13 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6]
+  PYTHONPATH=src python -m benchmarks.run [--only fig6] [--json DIR]
 
-Prints ``name,us_per_call,derived`` CSV. Fig 2/3 are model+calibration
-surrogates (no real NIC here); Fig 6 combines the measured RSI commit path
-with the paper's message-economics model; Fig 7 is the analytic cost model;
-Fig 8a/8b are measured end-to-end operator runtimes.
+Prints ``name,us_per_call,derived`` CSV. With ``--json DIR``, also writes a
+machine-readable ``BENCH_<figure>.json`` per figure (rows plus the fabric
+transport's per-verb message/byte counters when the figure measures them)
+so the perf trajectory is comparable across PRs.
+
+Fig 2/3 are model+calibration surrogates (no real NIC here); Fig 6 combines
+the measured RSI commit path with the paper's message-economics model; Fig 7
+is the analytic cost model; Fig 8a/8b are measured end-to-end operator
+runtimes through the ``repro.db`` facade (planner choice + forced grid).
 """
 import argparse
+import json
+import os
 import sys
 
 from benchmarks import (fig2_microbench, fig6_rsi, fig7_costmodel,
@@ -22,20 +29,48 @@ MODULES = {
 }
 
 
+def _run_module(mod):
+    """Normalize run() output: rows, or (rows, extras dict)."""
+    res = mod.run()
+    if isinstance(res, tuple):
+        rows, extras = res
+    else:
+        rows, extras = res, {}
+    return list(rows), dict(extras)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(MODULES))
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="write BENCH_<figure>.json result files here")
     args = ap.parse_args()
     names = [args.only] if args.only else sorted(MODULES)
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
         try:
-            for row, us, derived in MODULES[name].run():
-                print(f"{row},{us:.2f},{derived}")
+            rows, extras = _run_module(MODULES[name])
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+            continue
+        for row, us, derived in rows:
+            print(f"{row},{us:.2f},{derived}")
+        if args.json:
+            payload = {
+                "figure": name,
+                "rows": [{"name": row, "us_per_call": us,
+                          "derived": derived}
+                         for row, us, derived in rows],
+                **extras,
+            }
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"wrote {path}", file=sys.stderr)
     if failed:
         raise SystemExit(f"benchmarks failed: {[n for n, _ in failed]}")
 

@@ -2,71 +2,79 @@
 NAM store under RSI (paper §4.3) — read 3 products, update 3 stocks, insert
 1 order + 3 orderlines; concurrent batches with CAS arbitration.
 
-The commit runs on the unified verb fabric: ``rsi.commit`` routes prepares
-and installs through ``fabric.route()`` over a transport, which counts every
-message and byte the protocol issues — printed at the end as the measured
-message economics (swap in ``MeshTransport(mesh, "data")`` for the sharded
-NAM deployment; the protocol code does not change).
+Now written against the ``repro.db`` facade: a ``Database`` owns the
+products table (regions in the NAM pool), the timestamp oracle (FETCH_ADD
+on a counter word), and ONE fabric transport that every verb runs — and is
+counted — through.  Each checkout is a ``Session``; a wave of sessions
+commits as one routed prepare/install round trip.  Swap
+``Database(transport=MeshTransport(mesh, "data"))`` for the sharded NAM
+deployment; no protocol code changes.
 
-  PYTHONPATH=src python examples/nam_oltp.py
+  PYTHONPATH=src python examples/nam_oltp.py [--isolation rsi|2pc]
 """
+import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_nam import OLTP
 from repro.core import rsi
-from repro.fabric import LocalTransport
+from repro.db import Database
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--isolation", default="rsi", choices=("rsi", "2pc"),
+                    help="commit backend behind the same Session API")
+    args = ap.parse_args()
+
     n_products = 10_000   # scaled-down TPC-W product table
-    cfg = rsi.StoreCfg(num_records=n_products + 100_000, payload_words=4)
-    store = rsi.init_store(cfg)
-    # seed products at CID 1
-    store["words"] = store["words"].at[:n_products].set(jnp.uint32(1))
-    store["cids"] = store["cids"].at[:n_products, 0].set(1)
+    db = Database()
+    products = db.create_table("products", n_products + 100_000,
+                               payload_words=4)
+    products.seed(np.arange(n_products))         # base rows at load epoch
 
     key = jax.random.PRNGKey(0)
-    T = 512               # concurrent checkout txns per wave
-    transport = LocalTransport()
-    commit = jax.jit(lambda s, t: rsi.commit(s, t, transport=transport))
-    next_cid = 2
+    T = 512               # concurrent checkout sessions per wave
     order_base = n_products
     total, committed = 0, 0
     t0 = time.perf_counter()
     for wave in range(8):
         key = jax.random.fold_in(key, wave)
-        prods = jax.random.randint(key, (T, OLTP.updates_per_txn),
-                                   0, n_products)
-        # writes: 3 stock updates + 4 inserts (order + 3 orderlines)
+        prods = np.asarray(jax.random.randint(
+            key, (T, OLTP.updates_per_txn), 0, n_products))
+        # inserts: 1 order + 3 orderlines per checkout
         inserts = (order_base + wave * T * 4
-                   + jnp.arange(T * 4).reshape(T, 4))
-        recs = jnp.concatenate([prods, inserts], axis=1).astype(jnp.int32)
-        _, rids, _ = rsi.read_snapshot(store, prods, jnp.uint32(next_cid))
-        read_cids = jnp.concatenate(
-            [rids, jnp.zeros((T, 4), jnp.uint32)], axis=1)
-        txns = rsi.TxnBatch(
-            write_recs=recs,
-            read_cids=read_cids,
-            new_payload=jnp.ones((T, 7, cfg.payload_words), jnp.uint32),
-            cid=(next_cid + jnp.arange(T)).astype(jnp.uint32))
-        ok, store = commit(store, txns)
-        next_cid += T
+                   + np.arange(T * 4).reshape(T, 4))
+        # one vectorized snapshot read serves the whole wave of clients
+        _, rids, _ = db.snapshot_read(products, prods)
+        rids = np.asarray(rids)
+        sessions = []
+        for i in range(T):
+            s = db.session(isolation=args.isolation).begin()
+            s.put(products, prods[i],                   # 3 stock updates
+                  np.ones((3, 4), np.uint32), read_cids=rids[i])
+            s.put(products, inserts[i],                 # 4 blind inserts
+                  np.ones((4, 4), np.uint32))
+            sessions.append(s)
+        ok = db.commit(sessions)                        # one routed commit
         total += T
         committed += int(ok.sum())
     dt = time.perf_counter() - t0
     print(f"{total} checkout txns, {committed} committed "
           f"({100*committed/total:.1f}%), {total/dt:,.0f} txn/s local "
           f"(compute only; see benchmarks/fig6 for the network model)")
-    hc = int(rsi.highest_committed(store['bitvec'][:16]))
-    print(f"timestamp bitvector: highest consecutive committed = {hc}")
+    print(f"oracle read timestamp after run: {db.read_timestamp()}")
+    hc = int(rsi.highest_committed(products.store["bitvec"][2:18]))
+    print(f"timestamp bitvector: consecutive committed after load = {hc}")
     print("per-commit message economics (fabric transport counters):")
-    for verb, s in sorted(transport.stats().items()):
+    # jitted commit verbs count once at trace time (per wave shape); the
+    # eager oracle FETCH_ADDs and snapshot READs count on every wave
+    for verb, s in sorted(db.fabric_stats().items()):
+        per = s["msgs"] / (total if verb in ("read", "fetch_add") else T)
         print(f"  {verb:>9}: {s['msgs']:>6} msgs  {s['bytes']:>9} B  "
-              f"({s['msgs'] / T:.2f} msgs/txn)")
+              f"({per:.2f} msgs/txn)")
 
 
 if __name__ == "__main__":

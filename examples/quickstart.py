@@ -1,20 +1,47 @@
-"""Quickstart: build a reduced arch, run a forward pass, one train step, and
-a few decode steps — all on CPU.
+"""Quickstart: build a reduced arch, run a forward pass, one train step, a
+few decode steps — and the paper's database side through the ``repro.db``
+facade (a transaction + a cost-planned query) — all on CPU.
 
   PYTHONPATH=src python examples/quickstart.py [--arch glm4-9b]
 
-For the paper's database side — the one-sided verb fabric, RSI commit, and
-its measured message economics — see examples/nam_oltp.py and docs/fabric.md.
+For the full database tour — tables, sessions, the planner and its measured
+message economics — see examples/nam_oltp.py, docs/db.md and docs/fabric.md.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduce_config
+from repro.db import Database
 from repro.models import api
 from repro.train.optimizer import make_optimizer
 from repro.train.train_step import build_train_step
+
+
+def nam_db_demo():
+    """The NAM-DB facade in ten lines: one transaction, one planned query."""
+    db = Database()
+    accounts = db.create_table("accounts", 256, payload_words=1)
+    accounts.seed(np.arange(8), np.full((8, 1), 100))
+    with db.session() as s:                       # begin() via __enter__
+        pay, rids, _ = s.get(accounts, [0, 1])
+        s.put(accounts, [0, 1], np.asarray(pay) + 25, read_cids=rids)
+    print(f"db: txn committed={s.committed} cid={s.cid}")
+
+    n = 4096
+    key = jax.random.PRNGKey(7)
+    db.load_table("R", jnp.arange(1, n + 1, dtype=jnp.uint32),
+                  jnp.full((n,), 3, jnp.uint32))
+    db.load_table("S", jax.random.randint(key, (n,), 1, 2 * n
+                                          ).astype(jnp.uint32),
+                  jnp.full((n,), 2, jnp.uint32))
+    q = db.scan("R").join(db.scan("S").filter(sel=0.5)).aggregate()
+    ex = db.explain(q)                            # costed alternatives
+    res = db.execute(q)                           # planner's argmin choice
+    print(f"db: planner chose {ex.chosen} -> join aggregate "
+          f"{int(res.value)} ({len(ex.alternatives)} costed alternatives)")
 
 
 def main():
@@ -53,6 +80,8 @@ def main():
         logits, state = api.decode_step(cfg, params, state, tok)
         tok = jnp.argmax(logits, axis=-1)
     print(f"decode: 5 tokens, last={tok[:, 0].tolist()}")
+
+    nam_db_demo()
 
 
 if __name__ == "__main__":

@@ -29,8 +29,11 @@ def t_mem(nbytes):
     return nbytes * C_MEM
 
 
-def t_net(nbytes, net: str):
-    return nbytes * C_NET[net]
+def t_net(nbytes, net):
+    """net: a C_NET key, or a float s/byte (e.g. calibrated from the fabric
+    transport's measured byte counters by ``repro.db.planner``)."""
+    c = C_NET[net] if isinstance(net, str) else float(net)
+    return nbytes * c
 
 
 def t_part(nbytes, net: str):
@@ -69,6 +72,43 @@ def t_rrj(nr, ns, net: str = "rdma"):
     """RRJ (§5.2): network partition fused with the radix pass;
     T = 2 c_mem (wR+wS) (assuming c_net ~ c_mem and one pass)."""
     return 2 * (t_mem(nr) + t_mem(ns))
+
+
+AGG_GROUP_BYTES = 16          # group row on the wire: u32 key + u64 + pad
+CPU_GHZ = 2.2                 # per-message CPU cost base (Fig 3 cluster)
+
+
+def t_msgs(n_msgs, net):
+    """Per-message CPU time (Fig 3 cycles at CPU_GHZ).  A calibrated float
+    net (s/byte) carries no message constant; bill it at the RDMA rate."""
+    cm = CYCLES_PER_MSG[net if isinstance(net, str) else "rdma"]
+    return n_msgs * cm / (CPU_GHZ * 1e9)
+
+
+def t_dist_agg(nbytes, groups, net, nodes: int = 4,
+               group_bytes: int = AGG_GROUP_BYTES):
+    """Dist-AGG (§5.3): local aggregation pass over the data, then a global
+    union that ships and re-aggregates nodes x groups rows on every node —
+    the term that makes the classic scheme degrade with distinct count.
+    One union message per peer."""
+    union = nodes * groups * group_bytes
+    return (t_mem(nbytes) + t_part(union, net) + t_mem(union)
+            + t_msgs(nodes, net))
+
+
+def t_rdma_agg(nbytes, groups, net="rdma", nodes: int = 4,
+               group_bytes: int = AGG_GROUP_BYTES, flush_chunks: int = 4):
+    """RDMA-AGG (§5.3): cache-sized pre-aggregation (one pass over the
+    data); partition-table overflow is flushed in the background (selective
+    signaling hides the wire, leaving the materialize pass over the flushed
+    tables), and each owner post-aggregates only its groups/nodes slice.
+    The flush posts chunks x nodes table messages — the fixed overhead that
+    lets the classic scheme win at tiny distinct counts (Fig 8b's left
+    edge)."""
+    flush = flush_chunks * groups * group_bytes
+    return (t_mem(nbytes) + t_mem(flush) + t_mem(groups * group_bytes
+                                                 / nodes)
+            + t_msgs(flush_chunks * nodes, net))
 
 
 # ------------------------------------------------------------- OLTP §4 ----

@@ -190,14 +190,20 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
                     "bitvec": bitvec}
 
 
-def read_snapshot(store, recs, rid):
+def read_snapshot(store, recs, rid, *, transport=None):
     """Read records at snapshot `rid`: newest version with CID <= rid.
-    Returns (payload (..., m), cid, ok — False if no visible version)."""
-    cids = store["cids"][recs]                     # (..., slots)
+    Returns (payload (..., m), cid, ok — False if no visible version).
+
+    transport: when given, the version-array gathers go through the
+    transport's READ verb so the snapshot traffic is counted (the paper's
+    one-sided read path); None = plain local indexing."""
+    rd = (transport.read if transport is not None
+          else (lambda region, idx: region[idx]))
+    cids = rd(store["cids"], recs)                 # (..., slots)
     vis = (cids <= rid) & (cids > 0)
     slot = jnp.argmax(vis, axis=-1)
     ok = jnp.any(vis, axis=-1)
     pay = jnp.take_along_axis(
-        store["payload"][recs], slot[..., None, None], axis=-2)[..., 0, :]
+        rd(store["payload"], recs), slot[..., None, None], axis=-2)[..., 0, :]
     cid = jnp.take_along_axis(cids, slot[..., None], axis=-1)[..., 0]
     return pay, cid, ok

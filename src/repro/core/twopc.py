@@ -18,9 +18,10 @@ from dataclasses import dataclass
 from repro.core import rsi
 
 
-def commit(store, txns, priority=None, transport=None):
+def commit(store, txns, priority=None, transport=None, chunks: int = 1):
     """2PC/SI commit of a txn batch via a TM: same schedule as RSI."""
-    return rsi.commit(store, txns, transport=transport, priority=priority)
+    return rsi.commit(store, txns, transport=transport, priority=priority,
+                      chunks=chunks)
 
 
 def message_counts(n_rm: int) -> dict:

@@ -1,0 +1,31 @@
+"""repro.db — the NAM-DB facade over the verb fabric (see docs/db.md).
+
+One user-facing layer where OLTP transactions and cost-planned OLAP queries
+are the same system, per the paper's central redesign:
+
+  Database   tables + timestamp oracle + planner over ONE fabric transport
+  Table      key/value relation bound to NamPool regions (RSI version
+             store + key column + lock-word column) with declared
+             home-shard partitioning
+  Session    begin()/get/put/commit snapshot transactions; waves of
+             sessions commit as one routed fabric round trip; isolation
+             backend selectable ("rsi" | "2pc") behind the same API
+  Plan       logical scan -> filter(bloom) -> join -> aggregate trees
+  Planner    §5.1/§5.3 network cost models pick GHJ / GHJ+Bloom /
+             RDMA-GHJ / RRJ and Dist-AGG / RDMA-AGG; explain() returns
+             every costed alternative
+
+New workloads become plans against tables — not bespoke transport plumbing.
+"""
+from repro.db.database import Database, Explain, QueryResult
+from repro.db.plan import Plan
+from repro.db.planner import AGG_VARIANTS, JOIN_VARIANTS, Alternative, \
+    Planner
+from repro.db.session import ISOLATION_LEVELS, Session
+from repro.db.table import Table, TableSchema
+
+__all__ = [
+    "Database", "Explain", "QueryResult", "Plan",
+    "Planner", "Alternative", "JOIN_VARIANTS", "AGG_VARIANTS",
+    "Session", "ISOLATION_LEVELS", "Table", "TableSchema",
+]

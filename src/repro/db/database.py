@@ -1,0 +1,343 @@
+"""The Database: one NAM-DB facade over the verb fabric.
+
+A :class:`Database` owns the pieces every workload was previously
+hand-wiring:
+
+  * a :class:`~repro.fabric.NamPool` of named regions (tables allocate
+    their stores here; compute/storage co-location stays a sharding choice),
+  * ONE fabric transport (``LocalTransport`` default, ``MeshTransport`` for
+    the sharded NAM deployment) that every verb of every protocol runs —
+    and is counted — through,
+  * a timestamp oracle (a counter word bumped with the FETCH_ADD verb —
+    NAM-DB's commit-timestamp service as a region, not a server),
+  * the network-aware :class:`~repro.db.planner.Planner` that picks shuffle
+    and aggregation strategies from the §5.1/§5.3 cost models.
+
+OLTP: ``db.session()`` transactions commit through RSI (or the 2PC
+baseline) in batched waves — ``db.commit([s1, s2, ...])`` is one routed
+prepare/install round trip for the whole wave.  OLAP:
+``db.scan("R").join(db.scan("S")).aggregate()`` builds a logical plan;
+``db.execute(plan)`` runs the planner's argmin choice (or a forced variant
+for benchmark grids) and ``db.explain(plan)`` returns every costed
+alternative.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import fabric
+from repro.core import aggregation, rsi, shuffle, twopc
+from repro.db.plan import Plan
+from repro.db.planner import Planner
+from repro.db.session import Session
+from repro.db.table import Table, TableSchema
+
+# modeled cluster size when running the single-shard degenerate case: the
+# paper's §5.4 deployment, so planner choices match the target NAM cluster
+DEFAULT_MODEL_NODES = 4
+
+_BACKENDS = {"rsi": rsi.commit, "2pc": twopc.commit}
+
+
+@dataclass(frozen=True)
+class QueryResult:
+    value: object                       # operator output (device array)
+    variant: str                        # strategy that actually ran
+    alternatives: tuple                 # costed Alternatives, argmin first
+    plan: Plan
+    elapsed_s: float
+    stats: dict = field(default_factory=dict)   # fabric counter delta
+                                                # (trace-time; empty on
+                                                # cached re-execution)
+
+    @property
+    def planned(self) -> str:
+        return next(a.name for a in self.alternatives if a.chosen)
+
+
+@dataclass(frozen=True)
+class Explain:
+    plan: str                           # plan.describe()
+    kind: str                           # join_agg | group_agg
+    alternatives: tuple                 # argmin first
+    inputs: dict                        # cost-model inputs (bytes, sel, ...)
+
+    @property
+    def chosen(self) -> str:
+        return next(a.name for a in self.alternatives if a.chosen)
+
+    def pretty(self) -> str:
+        lines = [f"plan: {self.plan}",
+                 f"inputs: {self.inputs}"]
+        lines += [a.pretty() for a in self.alternatives]
+        return "\n".join(lines)
+
+
+class Database:
+    """Tables + sessions + planner over one fabric transport."""
+
+    def __init__(self, transport=None, *, net: str = "rdma",
+                 model_nodes: Optional[int] = None):
+        self.transport = transport or fabric.LocalTransport()
+        self.pool = fabric.NamPool()
+        nodes = (model_nodes if model_nodes is not None else
+                 (self.transport.n if self.transport.n > 1
+                  else DEFAULT_MODEL_NODES))
+        self.planner = Planner(net=net, nodes=nodes)
+        self.tables: dict = {}
+        # timestamp oracle: cid 1 is the load epoch, live txns start at 2
+        self.pool.alloc("oracle/clock", (1,), jnp.uint32, ("replicated",))
+        self._clock = jnp.full((1,), 2, jnp.uint32)
+        self._jit_cache: dict = {}
+
+    # ------------------------------------------------------------ tables --
+
+    def create_table(self, name: str, num_records: int, *,
+                     payload_words: int = 4, version_slots: int = 1,
+                     partitioning: str = "range",
+                     num_timestamps: int = 60_000) -> Table:
+        schema = TableSchema(name=name, num_records=num_records,
+                             payload_words=payload_words,
+                             version_slots=version_slots,
+                             partitioning=partitioning)
+        t = Table(schema, self.pool, self.transport,
+                  num_timestamps=num_timestamps)
+        self.tables[name] = t
+        return t
+
+    def load_table(self, name: str, keys, vals, *,
+                   partitioning: str = "hash") -> Table:
+        """Create + bulk-load an OLAP relation in one call (payload word 0
+        holds the value column; hash partitioning = shuffle by key)."""
+        t = self.create_table(name, num_records=len(keys), payload_words=1,
+                              partitioning=partitioning)
+        return t.load(keys, vals)
+
+    def table(self, name_or_table) -> Table:
+        if isinstance(name_or_table, Table):
+            return name_or_table
+        return self.tables[name_or_table]
+
+    # ---------------------------------------------------- timestamp oracle --
+
+    def claim_cids(self, k: int) -> np.ndarray:
+        """Claim k commit timestamps with one FETCH_ADD on the oracle word
+        (every client bumps the same counter — §3.2's decentralized pull)."""
+        fetched, self._clock = self.transport.fetch_add(
+            self._clock, jnp.zeros((k,), jnp.int32),
+            jnp.ones((k,), jnp.uint32))
+        return np.asarray(fetched, np.uint32)
+
+    def read_timestamp(self) -> int:
+        """Current read snapshot: every cid below the clock is decided
+        (committed or burned — RSI aborts consume their slot too)."""
+        return int(self._clock[0]) - 1
+
+    # ---------------------------------------------------------- sessions --
+
+    def session(self, isolation: str = "rsi") -> Session:
+        return Session(self, isolation=isolation)
+
+    def snapshot_read(self, table, recs, rid: Optional[int] = None):
+        """Vectorized snapshot read outside any session (recs of any
+        shape): newest version with CID <= rid (default: the oracle's
+        current read timestamp), as counted one-sided READs.
+        Returns (payload, read_cids, ok)."""
+        t = self.table(table)
+        rid = self.read_timestamp() if rid is None else int(rid)
+        return rsi.read_snapshot(t.store, jnp.asarray(recs, jnp.int32),
+                                 jnp.uint32(rid), transport=self.transport)
+
+    def commit(self, sessions: List[Session], *, chunks: int = 1,
+               priority=None) -> np.ndarray:
+        """Commit a wave of concurrent sessions as ONE batched fabric
+        commit (one routed prepare + one routed install round trip).
+        Returns the per-session committed mask."""
+        if not sessions:
+            return np.zeros((0,), bool)
+        isolation = sessions[0].isolation
+        if any(s.isolation != isolation for s in sessions):
+            raise ValueError("mixed isolation levels in one commit wave")
+        # read-only sessions commit trivially under SI (no validate+lock)
+        wave = sessions
+        for s in wave:
+            if s.table_name is None:
+                s.committed = True
+        sessions = [s for s in wave if s.table_name is not None]
+        if not sessions:
+            return np.ones((len(wave),), bool)
+        names = {s.table_name for s in sessions}
+        if len(names) != 1:
+            raise ValueError(f"one table per commit wave, got {names}")
+        t = self.table(names.pop())
+        writes = [s.writes() for s in sessions]
+        T = len(sessions)
+        W = max(r.shape[0] for r, _, _ in writes)
+        m = t.schema.payload_words
+        recs = np.full((T, W), -1, np.int32)
+        pay = np.zeros((T, W, m), np.uint32)
+        rcids = np.zeros((T, W), np.uint32)
+        for i, (r, p, rc) in enumerate(writes):
+            if r.shape[0]:
+                recs[i, :r.shape[0]] = r
+                pay[i, :r.shape[0]] = p
+                rcids[i, :r.shape[0]] = rc
+        cids = self.claim_cids(T)
+        txns = rsi.TxnBatch(write_recs=jnp.asarray(recs),
+                            read_cids=jnp.asarray(rcids),
+                            new_payload=jnp.asarray(pay),
+                            cid=jnp.asarray(cids))
+        ok, t.store = self._jit_commit(isolation, chunks)(
+            t.store, txns,
+            None if priority is None else jnp.asarray(priority, jnp.int32))
+        if self.transport.n > 1:
+            # msg 3 completion: the routed commit body only flips bitvector
+            # bits inside each client shard's local range, but the facade's
+            # oracle hands out *globally* contiguous cids (scalar SI
+            # timestamps), so the out-of-range flips are finished here —
+            # unsignaled one-sided WRITEs of the clients' own slots
+            # (committed and aborted txns both burn theirs)
+            t.store["bitvec"] = self.transport.write(
+                t.store["bitvec"], jnp.asarray(cids, jnp.int32),
+                jnp.ones((T,), bool))
+        ok = np.asarray(ok)
+        for s, committed, cid in zip(sessions, ok, cids):
+            s.committed = bool(committed)
+            s.cid = int(cid)
+        return np.asarray([s.committed for s in wave], bool)
+
+    def _jit_commit(self, isolation: str, chunks: int):
+        key = ("commit", isolation, chunks)
+        if key not in self._jit_cache:
+            backend = _BACKENDS[isolation]
+            self._jit_cache[key] = jax.jit(
+                lambda store, txns, prio: backend(
+                    store, txns, transport=self.transport, priority=prio,
+                    chunks=chunks))
+        return self._jit_cache[key]
+
+    # ------------------------------------------------------------ queries --
+
+    def scan(self, table) -> Plan:
+        name = table.schema.name if isinstance(table, Table) else table
+        if name not in self.tables:
+            raise KeyError(f"no table {name!r}")
+        return Plan("scan", table=name)
+
+    def _analyze(self, plan: Plan):
+        """(kind, alternatives argmin-first, cost-model inputs)."""
+        kind = plan.kind()
+        if kind == "join_agg":
+            join = plan.children[0]
+            left, right = join.children
+            rtab = self.table(left.scan_table())
+            stab = self.table(right.scan_table())
+            sel = left.selectivity() * right.selectivity()
+            nr, ns = rtab.stats()["bytes"], stab.stats()["bytes"]
+            alts = self.planner.join_alternatives(nr, ns, sel)
+            return kind, alts, {"nr_bytes": nr, "ns_bytes": ns, "sel": sel,
+                                "net": self.planner.net}
+        if kind == "group_agg":
+            if plan.groups is None:
+                raise ValueError("a group aggregate needs "
+                                 ".aggregate(groups=G); bare .aggregate() "
+                                 "is the scalar join aggregate")
+            child = plan.children[0]
+            tab = self.table(child.scan_table())
+            nb = tab.stats()["bytes"]
+            alts = self.planner.agg_alternatives(nb, plan.groups)
+            return kind, alts, {"nbytes": nb, "groups": plan.groups,
+                                "nodes": self.planner.nodes,
+                                "net": self.planner.net}
+        raise ValueError(f"cannot plan a bare {kind} — add .aggregate()")
+
+    def explain(self, plan: Plan) -> Explain:
+        """Costed alternatives for a plan, argmin first — no execution."""
+        kind, alts, inputs = self._analyze(plan)
+        return Explain(plan.describe(), kind, tuple(alts), inputs)
+
+    def execute(self, plan: Plan, *, force_variant: Optional[str] = None,
+                capacity_factor: float = 2.0,
+                calibrate: bool = False) -> QueryResult:
+        """Run a plan with the planner's choice (or `force_variant` for
+        benchmark grids).  Returns value + the full costed explain.
+
+        calibrate=True re-runs the compiled operator once more and feeds
+        the planner this shape's traced fabric byte counters plus the
+        *cached-run* wall clock (compile time excluded) minus the variant's
+        modeled compute share, so later plans are priced with the measured
+        wire rate.  Needs a fresh plan shape on this database — counters
+        accumulate at trace time only (see docs/fabric.md)."""
+        kind, alts, inputs = self._analyze(plan)
+        variant = force_variant or Planner.chosen(alts)
+        if force_variant:
+            known = {a.name for a in alts}
+            if force_variant not in known:
+                raise ValueError(f"{force_variant!r} not in {sorted(known)}")
+        if kind == "join_agg":
+            join = plan.children[0]
+            rtab = self.table(join.children[0].scan_table())
+            stab = self.table(join.children[1].scan_table())
+            f = self._jit_join(variant, capacity_factor)
+            args = rtab.scan_arrays() + stab.scan_arrays()
+        else:
+            tab = self.table(plan.children[0].scan_table())
+            f = self._jit_agg(variant, plan.groups)
+            args = tab.scan_arrays()
+        before = self._stats_totals()
+        t0 = time.perf_counter()
+        value = jax.block_until_ready(f(*args))
+        elapsed = time.perf_counter() - t0
+        stats = self._stats_delta(before)
+        if calibrate:
+            t0 = time.perf_counter()
+            value = jax.block_until_ready(f(*args))   # now surely cached
+            elapsed = time.perf_counter() - t0
+            if stats:
+                self.planner.calibrate(
+                    stats, elapsed,
+                    compute_s=self.planner.compute_share(kind, variant,
+                                                         inputs))
+        return QueryResult(value=value, variant=variant,
+                           alternatives=tuple(alts), plan=plan,
+                           elapsed_s=elapsed, stats=stats)
+
+    def _jit_join(self, variant: str, capacity_factor: float):
+        key = ("join", variant, capacity_factor)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(shuffle.make_distributed_join(
+                self.transport, variant, capacity_factor=capacity_factor))
+        return self._jit_cache[key]
+
+    def _jit_agg(self, variant: str, groups: int):
+        key = ("agg", variant, groups)
+        if key not in self._jit_cache:
+            mk = (aggregation.dist_agg if variant == "dist_agg"
+                  else aggregation.rdma_agg)
+            self._jit_cache[key] = jax.jit(mk(self.transport, groups))
+        return self._jit_cache[key]
+
+    # ------------------------------------------------------- observability --
+
+    def _stats_totals(self) -> dict:
+        return {k: dict(v) for k, v in self.transport.stats().items()}
+
+    def _stats_delta(self, before: dict) -> dict:
+        out = {}
+        for verb, s in self.transport.stats().items():
+            b = before.get(verb, {"calls": 0, "msgs": 0, "bytes": 0})
+            d = {k: s[k] - b.get(k, 0) for k in s}
+            if any(d.values()):
+                out[verb] = d
+        return out
+
+    def fabric_stats(self) -> dict:
+        """Cumulative per-verb message/byte counters (trace-time; see
+        docs/fabric.md for semantics)."""
+        return self.transport.stats()

@@ -221,8 +221,8 @@ def _moe_replicated_body(cfg, mcfg, tp: int, do_gather: bool,
     traffic (see EXPERIMENTS.md §Perf)."""
     local_e = wi.shape[0]
     B_l, S_l, D = x.shape
-    dp = jax.lax.axis_size("data")
     d_l = wi.shape[1]                                  # D / dp
+    dp = D // d_l                                      # static 'data' size
     me_m = jax.lax.axis_index("model")
     me_d = jax.lax.axis_index("data")
 

@@ -1,9 +1,10 @@
 """Serving engine: continuous batching over a NAM-resident KV pool.
 
-Decode slots form a shared pool; slot allocation goes through the RSI
-lock-word CAS (repro.fabric.cas) — the same validate+lock primitive the
-paper uses for transactions arbitrates concurrent slot claims, so any
-frontend ("client" in NAM terms) can claim capacity without a coordinator.
+Decode slots form a shared pool registered as a ``repro.db`` table: slot
+allocation is the table's lock column — the same RSI validate+lock CAS the
+facade uses for transactions arbitrates concurrent slot claims (counted by
+the database's fabric transport), so any frontend ("client" in NAM terms)
+can claim capacity without a coordinator.
 
 The engine runs fixed-shape jitted steps (prefill once per request wave,
 then one decode_step per token across all active slots) — static shapes keep
@@ -18,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import fabric
+from repro.db import Database
 from repro.models import api
 
 
@@ -33,35 +34,39 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256):
+    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256,
+                 db: Optional[Database] = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
-        # RSI-style lock words guarding each decode slot (0 = free)
-        self.slot_words = jnp.zeros((slots,), jnp.uint32)
+        # decode slots live in the shared NAM-DB: the table's lock-word
+        # column (0 = free) is the slot allocator.  Engines sharing one
+        # database each get their own slot table (unique region names).
+        self.db = db or Database()
+        name, k = "decode_slots", 2
+        while name in self.db.tables:
+            name, k = f"decode_slots_{k}", k + 1
+        self.slot_table = self.db.create_table(
+            name, num_records=slots, payload_words=1)
         self.state = api.init_decode_state(cfg, params, slots, max_seq)
         self.active: dict[int, Request] = {}
         self._decode = jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t))
         self._pos = np.zeros((slots,), np.int32)
 
+    @property
+    def slot_words(self):
+        """The slot table's lock column (0 = free, lock bit = claimed)."""
+        return self.slot_table.store["words"]
+
     # ------------------------------------------------------ slot alloc --
 
     def _claim_slots(self, n: int):
-        """Claim up to n free slots via CAS on the lock words (one-sided)."""
-        idx = jnp.arange(self.slots, dtype=jnp.int32)
-        expected = jnp.zeros((self.slots,), jnp.uint32)
-        ok, words = fabric.cas(self.slot_words, idx, expected,
-                            jnp.full((self.slots,), 1 << 31, jnp.uint32))
-        free = [int(i) for i in np.nonzero(np.array(ok))[0][:n]]
-        keep = np.zeros(self.slots, bool)
-        keep[free] = True
-        self.slot_words = jnp.where(jnp.asarray(keep), words,
-                                    self.slot_words)
-        return free
+        """Claim up to n free slots via the table's lock-column CAS."""
+        return self.slot_table.claim_locks(n)
 
     def _release(self, slot: int):
-        self.slot_words = self.slot_words.at[slot].set(0)
+        self.slot_table.release_lock(slot)
 
     # --------------------------------------------------------- serving --
 

@@ -12,6 +12,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -54,6 +56,7 @@ if mode == "moe":
 elif mode == "rsi":
     from repro.core import rsi
     from repro.core.rsi import StoreCfg, TxnBatch
+    from repro.db import Database
     from repro.fabric import MeshTransport
     nrec, nsh = 32, 8
     mesh = jax.make_mesh((nsh,), ("data",))
@@ -65,18 +68,30 @@ elif mode == "rsi":
     rng = np.random.RandomState(0)
     T = 16  # txns (2 clients per shard)
     recs = np.stack([rng.permutation(nrec)[:2] for _ in range(T)])
+    pay = rng.randint(1, 99, (T, 2, 2)).astype(np.uint32)
     txns = TxnBatch(
         write_recs=jnp.asarray(recs, jnp.int32),
         read_cids=jnp.full((T, 2), 1, jnp.uint32),
-        new_payload=jnp.asarray(rng.randint(1, 99, (T, 2, 2)), jnp.uint32),
-        cid=jnp.asarray(8 * np.arange(T) + 70, jnp.uint32))
+        new_payload=jnp.asarray(pay),
+        cid=jnp.asarray(2 + np.arange(T), jnp.uint32))
     ok_local, st_local = rsi.commit(store, txns)
+    # sharded NAM deployment through the repro.db facade: a wave of
+    # sessions is one routed commit; the oracle assigns the same cids
     with mesh:
-        ok_sh, st_sh = rsi.commit(store, txns,
-                                  transport=MeshTransport(mesh, "data"))
+        db = Database(transport=MeshTransport(mesh, "data"))
+        tab = db.create_table("t", nrec, payload_words=2, num_timestamps=64)
+        tab.seed(np.arange(nrec))
+        sessions = []
+        for i in range(T):
+            s = db.session().begin()
+            s.put("t", recs[i], pay[i], read_cids=np.ones(2, np.uint32))
+            sessions.append(s)
+        ok_sh = db.commit(sessions)
     np.testing.assert_array_equal(np.array(ok_sh), np.array(ok_local))
-    np.testing.assert_array_equal(np.array(st_sh["words"]),
-                                  np.array(st_local["words"]))
+    for leaf in ("words", "payload", "cids", "bitvec"):
+        np.testing.assert_array_equal(np.array(tab.store[leaf]),
+                                      np.array(st_local[leaf]),
+                                      err_msg=leaf)
     print("RSI_PARITY_OK")
 
 elif mode == "olap":

@@ -27,9 +27,13 @@ def test_chunked_ce_matches_full(tmp_path):
     g1 = jax.grad(lambda p: api.loss_fn(cfg, p, batch))(params)
     lm.CE_CHUNK = 0
     g0 = jax.grad(lambda p: api.loss_fn(cfg, p, batch))(params)
-    d = max(float(jnp.abs(a - b).max())
+    # gradients accumulate through bf16 ops in a chunk-dependent order, so
+    # they can differ by one bf16 ulp at the leaf's magnitude (2^-7
+    # relative); compare relative to each leaf's scale, not absolutely
+    d = max(float((jnp.abs(a - b) /
+                   jnp.maximum(jnp.abs(a).max(), 1e-6)).max())
             for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)))
-    assert d < 1e-3
+    assert d < 1e-2
 
 
 def test_rs_outputs_identity_single_device():

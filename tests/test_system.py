@@ -6,6 +6,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config, reduce_config
 from repro.models import api
 from repro.serving.engine import Request, ServeEngine

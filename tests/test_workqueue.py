@@ -1,0 +1,70 @@
+"""claim_ticket_ranges — the §3.2 decentralized work queue head counter:
+priority semantics, contention (everyone FETCH_ADDs one word), and
+interleaving with other counter words."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import workqueue
+
+
+def test_claim_ranges_partition_the_ticket_space():
+    """Under full contention the claimed ranges must tile [head0, head0 +
+    sum(amounts)) with no gap and no overlap."""
+    rng = np.random.RandomState(0)
+    amounts = rng.randint(1, 17, size=(32,)).astype(np.uint32)
+    head = jnp.full((1,), 100, jnp.uint32)
+    starts, new_head = workqueue.claim_ticket_ranges(
+        head, jnp.asarray(amounts))
+    starts = np.array(starts)
+    ivals = sorted(zip(starts, starts + amounts))
+    assert ivals[0][0] == 100
+    for (a0, a1), (b0, _) in zip(ivals, ivals[1:]):
+        assert a1 == b0                       # contiguous, disjoint
+    assert ivals[-1][1] == 100 + amounts.sum() == int(new_head[0])
+
+
+def test_claim_ranges_priority_orders_the_queue():
+    """Lower priority claims first: worker w's start = sum of amounts of
+    all workers with lower priority, regardless of request order."""
+    amounts = np.array([4, 2, 8, 1], np.uint32)
+    prio = np.array([3, 0, 2, 1], np.int32)    # service order: 1, 3, 2, 0
+    head = jnp.zeros((1,), jnp.uint32)
+    starts, new_head = workqueue.claim_ticket_ranges(
+        head, jnp.asarray(amounts), priority=jnp.asarray(prio))
+    order = np.argsort(prio)
+    want = np.zeros(4, np.uint32)
+    acc = 0
+    for w in order:
+        want[w] = acc
+        acc += amounts[w]
+    np.testing.assert_array_equal(np.array(starts), want)
+    assert int(new_head[0]) == amounts.sum()
+
+
+def test_claim_ranges_default_priority_is_worker_order():
+    head = jnp.zeros((1,), jnp.uint32)
+    starts, _ = workqueue.claim_ticket_ranges(
+        head, jnp.array([5, 3, 2], jnp.uint32))
+    np.testing.assert_array_equal(np.array(starts), [0, 5, 8])
+
+
+def test_claim_ranges_zero_amount_worker_holds_place():
+    """A worker claiming 0 tickets gets an empty range at its service
+    position without perturbing anyone else's."""
+    head = jnp.full((1,), 7, jnp.uint32)
+    starts, new_head = workqueue.claim_ticket_ranges(
+        head, jnp.array([3, 0, 4], jnp.uint32))
+    np.testing.assert_array_equal(np.array(starts), [7, 10, 10])
+    assert int(new_head[0]) == 14
+
+
+def test_claim_ranges_repeated_waves_continue_from_head():
+    """The returned head is the next wave's queue state (the paper's
+    long-running shared counter)."""
+    head = jnp.zeros((1,), jnp.uint32)
+    seen = []
+    for _ in range(3):
+        starts, head = workqueue.claim_ticket_ranges(
+            head, jnp.array([2, 2], jnp.uint32))
+        seen.extend(int(s) for s in np.array(starts))
+    assert seen == [0, 2, 4, 6, 8, 10] and int(head[0]) == 12

@@ -1,4 +1,4 @@
-.PHONY: test test-fast bench bench-fig6 bench-json dev-deps
+.PHONY: test test-fast bench bench-fig6 bench-fig9 bench-json docs-check dev-deps
 
 test:            ## tier-1 suite (ROADMAP.md verify command)
 	PYTHONPATH=src python -m pytest -x -q
@@ -14,6 +14,12 @@ bench-json:      ## all figures + BENCH_<figure>.json result files
 
 bench-fig6:      ## RSI message economics (fabric transport counters)
 	PYTHONPATH=src python -m benchmarks.run --only fig6
+
+bench-fig9:      ## §6 parameter server vs sync all-reduce under skew
+	PYTHONPATH=src python -m benchmarks.run --only fig9
+
+docs-check:      ## markdown link check over README.md + docs/
+	python tools/check_links.py README.md docs
 
 dev-deps:        ## install test-only deps (pytest, hypothesis)
 	pip install -r requirements-dev.txt

@@ -1,0 +1,172 @@
+"""Fig 9 (ours, §6): distributed ML — synchronous all-reduce vs the
+bounded-stale NAM parameter server under injected straggler skew.
+
+The paper's §6 argument: with fast networks the analytical stack should be
+rebuilt on the same one-sided substrate — model state in network-attached
+memory, workers pulling bounded-stale views and pushing (compressed)
+gradients, work claimed off a decentralized queue so stragglers never gate
+the fleet.  This figure injects a compute-time skew (one worker
+``STRAGGLER_FACTOR``x slower) and compares, at equal total work:
+
+  * **sync all-reduce** — a barrier every step: wall-clock =
+    steps x (slowest worker + all-reduce wire), the straggler taxes
+    everyone;
+  * **paramserver(k)** — workers claim batches off a shared FETCH_ADD
+    ticket counter (``core.workqueue.claim_ticket_ranges``, §3.2's
+    decentralized work queue), pull through the bounded-staleness gate and
+    push int8+EF-compressed gradients through ``route()``; fast workers
+    simply claim more tickets.
+
+Compute time is a virtual clock (the skew is injected, deterministically);
+every fabric operation runs for real through a counted transport, and each
+mode's *measured* per-verb message/byte counters are converted to wire
+time with the §2 constants (``t_net`` + ``t_msgs``) and reported next to
+the §6 cost-model prediction (``t_ps_step`` / ``t_allreduce``).
+
+Claim reproduced: bounded-stale PS beats the synchronous barrier wall-clock
+under skew, and a larger staleness bound pays fewer pull bytes.
+"""
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.analytics import DEFAULT_SHARDS, ParameterServer
+from repro.core import costmodel, workqueue
+from repro.fabric import LocalTransport
+from repro.train import grad_compress as gc
+
+WORKERS = 4
+STRAGGLER_FACTOR = 4.0          # worker 0 is 4x slower
+BASE_COMPUTE_S = 10e-3          # virtual per-batch compute time
+TOTAL_BATCHES = 48
+NET = "rdma"
+PARAM_SHAPE = {"w": (256, 64), "b": (64,)}
+
+
+def _params():
+    key = jax.random.PRNGKey(0)
+    return {k: jax.random.normal(jax.random.fold_in(key, i), s) * 0.1
+            for i, (k, s) in enumerate(sorted(PARAM_SHAPE.items()))}
+
+
+def _grad(ticket: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(1), ticket)
+    return {k: jax.random.normal(jax.random.fold_in(key, i), s)
+            for i, (k, s) in enumerate(sorted(PARAM_SHAPE.items()))}
+
+
+def _wire_time(stats_delta: dict) -> float:
+    """Measured counters -> seconds with the §2 constants."""
+    nbytes = sum(v["bytes"] for v in stats_delta.values())
+    msgs = sum(v["msgs"] for v in stats_delta.values())
+    return costmodel.t_net(nbytes, NET) + costmodel.t_msgs(msgs, NET)
+
+
+def _delta(transport, before: dict) -> dict:
+    out = {}
+    for verb, s in transport.stats().items():
+        b = before.get(verb, {"calls": 0, "msgs": 0, "bytes": 0})
+        d = {k: s[k] - b.get(k, 0) for k in s}
+        if any(d.values()):
+            out[verb] = d
+    return out
+
+
+def _run_sync(compute_s):
+    """Barrier per step: everyone waits for the slowest, then all-reduces
+    the raw f32 gradient (one counted psum per step)."""
+    transport = LocalTransport()
+    steps = TOTAL_BATCHES // WORKERS
+    wall = 0.0
+    for step in range(steps):
+        flat = ravel_pytree(_grad(step))[0]
+        before = transport.stats()
+        transport.psum(flat)                    # the all-reduce wire
+        d = _delta(transport, before)
+        nbytes = sum(v["bytes"] for v in d.values())
+        # ring all-reduce: 2(W-1)/W of the counted bytes on the wire,
+        # 2(W-1) messages — the same terms t_allreduce prices, so the
+        # measured row is comparable to fig9/model_t_allreduce
+        wall += (max(compute_s)
+                 + costmodel.t_net(2 * (WORKERS - 1) / WORKERS * nbytes,
+                                   NET)
+                 + costmodel.t_msgs(2 * (WORKERS - 1), NET))
+    return wall, transport.stats()
+
+
+def _run_ps(compute_s, staleness: int):
+    """Decentralized: each worker claims tickets off the shared FETCH_ADD
+    head counter as soon as it is free (event loop on the virtual clock)."""
+    transport = LocalTransport()
+    ps = ParameterServer(_params(), transport=transport,
+                         staleness=staleness, block=256)
+    head = jnp.zeros((1,), jnp.uint32)
+    clock = [0.0] * WORKERS
+    done = 0
+    while done < TOTAL_BATCHES:
+        w = min(range(WORKERS), key=clock.__getitem__)
+        before = transport.stats()
+        starts, head = workqueue.claim_ticket_ranges(
+            head, jnp.ones((1,), jnp.uint32), transport=transport)
+        ticket = int(starts[0])
+        if ticket >= TOTAL_BATCHES:
+            break
+        ps.pull(worker=w)                       # bounded-stale READ
+        ps.push(_grad(ticket), worker=w)        # compressed routed push
+        clock[w] += compute_s[w] + _wire_time(_delta(transport, before))
+        done += 1
+    return max(clock), transport.stats()
+
+
+def run():
+    rows = []
+    compute_s = [BASE_COMPUTE_S] * WORKERS
+    compute_s[0] *= STRAGGLER_FACTOR
+
+    sync_wall, sync_stats = _run_sync(compute_s)
+    rows.append(("fig9/sync_allreduce_wallclock", sync_wall * 1e6,
+                 f"steps{TOTAL_BATCHES // WORKERS}_"
+                 f"straggler{STRAGGLER_FACTOR:g}x"))
+
+    params = _params()
+    comp_bytes, raw_bytes = gc.wire_bytes(params)
+    ps_stats = {}
+    ps_walls = {}
+    for k in (0, 8):
+        wall, stats = _run_ps(compute_s, staleness=k)
+        ps_walls[k], ps_stats[f"ps_k{k}"] = wall, stats
+        speedup = sync_wall / wall
+        beats = "beats_sync" if wall < sync_wall else "SLOWER_than_sync"
+        rows.append((f"fig9/ps_k{k}_wallclock", wall * 1e6,
+                     f"{beats}_x{speedup:.2f}"))
+        pull_bytes = stats.get("read", {}).get("bytes", 0)
+        push_bytes = stats.get("route", {}).get("bytes", 0)
+        rows.append((f"fig9/ps_k{k}_push_bytes", float(push_bytes),
+                     f"compressed_vs_f32_{raw_bytes * TOTAL_BATCHES}"))
+        rows.append((f"fig9/ps_k{k}_pull_bytes", float(pull_bytes),
+                     "staleness_gated"))
+
+    # §6 cost model prediction next to the measured economics
+    model = {
+        "t_allreduce_s": costmodel.t_allreduce(raw_bytes, WORKERS, NET),
+        "t_ps_step_k0_s": costmodel.t_ps_step(
+            raw_bytes, DEFAULT_SHARDS, NET, staleness=0, workers=WORKERS,
+            compress_ratio=comp_bytes / raw_bytes),
+        "t_ps_step_k8_s": costmodel.t_ps_step(
+            raw_bytes, DEFAULT_SHARDS, NET, staleness=8, workers=WORKERS,
+            compress_ratio=comp_bytes / raw_bytes),
+    }
+    rows.append(("fig9/model_t_allreduce", model["t_allreduce_s"] * 1e6,
+                 "per_step"))
+    rows.append(("fig9/model_t_ps_step_k8",
+                 model["t_ps_step_k8_s"] * 1e6, "per_step"))
+    extras = {"fabric": ps_stats, "sync_fabric": sync_stats,
+              "model": model,
+              "workers": WORKERS, "straggler_factor": STRAGGLER_FACTOR,
+              "total_batches": TOTAL_BATCHES,
+              "grad_bytes_f32": raw_bytes,
+              "grad_bytes_compressed": comp_bytes,
+              "wallclock_s": {"sync": sync_wall,
+                              **{f"ps_k{k}": w
+                                 for k, w in ps_walls.items()}}}
+    return rows, extras

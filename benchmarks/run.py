@@ -10,7 +10,9 @@ so the perf trajectory is comparable across PRs.
 Fig 2/3 are model+calibration surrogates (no real NIC here); Fig 6 combines
 the measured RSI commit path with the paper's message-economics model; Fig 7
 is the analytic cost model; Fig 8a/8b are measured end-to-end operator
-runtimes through the ``repro.db`` facade (planner choice + forced grid).
+runtimes through the ``repro.db`` facade (planner choice + forced grid);
+Fig 9 (ours, §6) is sync all-reduce vs the bounded-stale NAM parameter
+server under straggler skew.  Output schema: docs/benchmarks.md.
 """
 import argparse
 import json
@@ -18,7 +20,7 @@ import os
 import sys
 
 from benchmarks import (fig2_microbench, fig6_rsi, fig7_costmodel,
-                        fig8a_joins, fig8b_agg)
+                        fig8a_joins, fig8b_agg, fig9_ml)
 
 MODULES = {
     "fig2": fig2_microbench,
@@ -26,6 +28,7 @@ MODULES = {
     "fig7": fig7_costmodel,
     "fig8a": fig8a_joins,
     "fig8b": fig8b_agg,
+    "fig9": fig9_ml,
 }
 
 

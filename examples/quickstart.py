@@ -1,11 +1,12 @@
 """Quickstart: build a reduced arch, run a forward pass, one train step, a
-few decode steps — and the paper's database side through the ``repro.db``
-facade (a transaction + a cost-planned query) — all on CPU.
+few decode steps — the paper's database side through the ``repro.db``
+facade (a transaction + a cost-planned query) — and the §6 parameter
+server (a bounded-stale pull + a compressed push) — all on CPU.
 
   PYTHONPATH=src python examples/quickstart.py [--arch glm4-9b]
 
-For the full database tour — tables, sessions, the planner and its measured
-message economics — see examples/nam_oltp.py, docs/db.md and docs/fabric.md.
+For the full tours see examples/nam_oltp.py, docs/db.md, docs/fabric.md
+and docs/analytics.md.
 """
 import argparse
 
@@ -13,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analytics import ParameterServer
 from repro.configs import get_config, reduce_config
 from repro.db import Database
 from repro.models import api
@@ -42,6 +44,18 @@ def nam_db_demo():
     res = db.execute(q)                           # planner's argmin choice
     print(f"db: planner chose {ex.chosen} -> join aggregate "
           f"{int(res.value)} ({len(ex.alternatives)} costed alternatives)")
+
+
+def param_server_demo(params):
+    """§6 in five lines: model in NAM regions, bounded-stale pull,
+    compressed push through the fabric router."""
+    ps = ParameterServer(params, staleness=2)
+    view, epoch = ps.pull(worker=0)            # one-sided READ (cached ok)
+    grads = jax.tree.map(lambda p: 0.01 * jnp.ones_like(p), view)
+    ps.push(grads, worker=0)                   # int8+EF push via route()
+    comp, raw = ps.wire_bytes_per_push()
+    print(f"ps: epoch {epoch}->{ps.epoch}, push wire {comp:,}B "
+          f"(f32 {raw:,}B) over {ps.num_shards} shards")
 
 
 def main():
@@ -82,6 +96,7 @@ def main():
     print(f"decode: 5 tokens, last={tok[:, 0].tolist()}")
 
     nam_db_demo()
+    param_server_demo(params)
 
 
 if __name__ == "__main__":

@@ -29,6 +29,9 @@ def main():
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro-train-lm")
+    ap.add_argument("--sync-mode", default="allreduce",
+                    help="'allreduce' or 'paramserver(staleness=k)' — the "
+                         "§6 NAM parameter server (docs/analytics.md)")
     args = ap.parse_args()
 
     cfg = reduce_config(LM_100M) if args.tiny else LM_100M
@@ -36,7 +39,8 @@ def main():
     print(f"training {cfg.name}: {n/1e6:.1f}M params, {args.steps} steps")
     tcfg = TrainerConfig(steps=args.steps, global_batch=args.global_batch,
                          seq_len=args.seq_len, checkpoint_dir=args.ckpt_dir,
-                         checkpoint_every=50, log_every=10)
+                         checkpoint_every=50, log_every=10,
+                         sync_mode=args.sync_mode)
     tr = Trainer(cfg, tcfg)
     resumed = tr.maybe_restore()
     print(f"resumed={resumed} start_step={tr.step}")

@@ -1,0 +1,15 @@
+"""repro.analytics — advanced analytics on network-attached memory (§6).
+
+The third workload pillar of the paper, on the same one-sided verb fabric
+as OLTP (``repro.core.rsi`` / ``repro.db``) and OLAP (``repro.core.shuffle``
+/ ``repro.core.aggregation``): a NAM-style parameter server whose model
+state is partitioned across :class:`~repro.fabric.NamPool` regions, pulled
+with one-sided READs under a bounded-staleness epoch gate, and updated by
+compressed gradient pushes through the fabric router.
+
+See docs/analytics.md.
+"""
+from repro.analytics.paramserver import (DEFAULT_SHARDS, ParameterServer,
+                                         sgd_apply)
+
+__all__ = ["ParameterServer", "sgd_apply", "DEFAULT_SHARDS"]

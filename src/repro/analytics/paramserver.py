@@ -1,0 +1,236 @@
+"""NAM-style parameter server for advanced analytics (paper §6).
+
+The paper's third workload pillar redesigns analytical frameworks for fast
+networks: model state lives in network-attached memory, and workers touch
+it with the same one-sided verbs that rebuilt OLTP (§4) and OLAP (§5).
+:class:`ParameterServer` is that design over ``repro.fabric``:
+
+  * **parameters are regions** — the flattened model lives row-partitioned
+    across a ``(num_shards, shard_len)`` region in a
+    :class:`~repro.fabric.NamPool` (``ps/params``), so compute/storage
+    co-location stays a sharding choice exactly as for ``repro.db`` tables;
+  * **pull is a one-sided READ** — workers fetch shards with
+    ``transport.read`` and cache them; a **bounded-staleness gate** (at most
+    ``staleness`` epochs behind) decides when the cache must be refreshed,
+    so a larger bound trades parameter freshness for pull bytes;
+  * **the epoch is a FETCH_ADD counter** — the ``ps/epoch`` region is
+    bumped once per applied push, the same timestamp-oracle pattern as
+    ``repro.db``'s ``oracle/clock`` word ("The End of a Myth"'s oracle,
+    reused as a version clock: a pull can tell how stale its cache is with
+    one cheap READ of one word);
+  * **push is a routed, compressed write** — gradients are quantized with
+    ``repro.train.grad_compress`` (int8 + per-block scales, error-feedback
+    residual per worker) and travel to their owner shards through
+    ``transport.route()``, so the cross-pod axis pays compressed bytes and
+    the fabric counters price the wire honestly.
+
+The server itself stays "dumb" (paper §3.1.4): all protocol logic — the
+staleness gate, compression, the apply rule — runs client/host side against
+counted verbs. ``apply_fn(params_tree, grads_tree) -> params_tree``
+defaults to SGD; the trainer passes its optimizer's update (see
+``repro.train.trainer`` sync mode ``paramserver(staleness=k)``).
+
+See docs/analytics.md for the guided tour and ``benchmarks/fig9_ml.py``
+for the straggler experiment this enables.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro import fabric
+from repro.train import grad_compress as gc
+
+# modeled cluster size for the single-shard degenerate case — the same
+# §5.4 deployment constant the db facade uses (db.DEFAULT_MODEL_NODES)
+DEFAULT_SHARDS = 4
+
+
+@dataclass
+class _Cache:
+    """One worker's pulled view (already unraveled — a cache hit must be
+    free, not a full-model copy) + its epoch."""
+    tree: object
+    epoch: int
+
+
+def sgd_apply(lr: float = 0.1) -> Callable:
+    """Default server-side apply rule: plain SGD on the pushed gradient."""
+    def apply(params, grads):
+        return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                            params, grads)
+    return apply
+
+
+class ParameterServer:
+    """Partitioned model parameters in network-attached memory.
+
+    params:     template pytree (also the initial value).
+    transport:  a fabric transport (``LocalTransport`` default — the
+                counted loopback, same convention as ``repro.db``).
+    staleness:  bounded-staleness k — a pull may serve a cached view at
+                most k epochs behind the FETCH_ADD epoch counter (k=0 is
+                fully synchronous: every pull READs fresh shards).
+    block:      grad_compress block size (int8 codes + one f32 scale per
+                block on the wire).
+    compress:   False pushes raw f32 gradients (the parity baseline).
+    apply_fn:   server apply rule on pytrees; default SGD(lr).
+    num_shards: parameter partitions; must be a multiple of transport.n
+                (each fabric shard owns ``num_shards / n`` rows).
+    """
+
+    def __init__(self, params, *, transport=None, staleness: int = 0,
+                 block: int = 256, compress: bool = True,
+                 apply_fn: Optional[Callable] = None, lr: float = 0.1,
+                 num_shards: Optional[int] = None):
+        self.transport = transport or fabric.LocalTransport()
+        self.staleness = int(staleness)
+        self.block = int(block)
+        self.compress = bool(compress)
+        self.apply_fn = apply_fn or sgd_apply(lr)
+        if self.staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
+
+        flat, self._unravel = ravel_pytree(params)
+        flat = flat.astype(jnp.float32)
+        self._n_values = flat.size
+        n = self.transport.n
+        # default: the §5.4 cluster size, rounded up to a multiple of the
+        # transport's shard count so every fabric shard owns equal rows
+        S = int(num_shards) if num_shards else n * max(
+            1, -(-DEFAULT_SHARDS // n))
+        if S % n != 0:
+            raise ValueError(f"num_shards={S} not a multiple of "
+                             f"transport shards n={n}")
+        L = -(-self._n_values // S)                    # ceil
+        L += (-L) % self.block                         # block-align rows
+        self.num_shards, self.shard_len = S, L
+
+        self.pool = fabric.NamPool()
+        self.pool.alloc("ps/params", (S, L), jnp.float32, (None, None))
+        self.pool.alloc("ps/epoch", (1,), jnp.uint32, ("replicated",))
+        self._params = self._to_shards(flat)
+        self._epoch = jnp.zeros((1,), jnp.uint32)
+        self._cache: dict = {}
+        self._residuals: dict = {}
+
+    # ------------------------------------------------------------ layout --
+
+    def _to_shards(self, flat) -> jnp.ndarray:
+        S, L = self.num_shards, self.shard_len
+        return jnp.pad(flat.astype(jnp.float32),
+                       (0, S * L - flat.size)).reshape(S, L)
+
+    def _to_tree(self, shards):
+        return self._unravel(shards.reshape(-1)[:self._n_values])
+
+    # ------------------------------------------------------------- state --
+
+    @property
+    def epoch(self) -> int:
+        """Number of pushes applied (the FETCH_ADD counter's value)."""
+        return int(self._epoch[0])
+
+    def current_params(self):
+        """Server-side view (no wire traffic) — for checkpointing."""
+        return self._to_tree(self._params)
+
+    def wire_bytes_per_push(self) -> tuple:
+        """(compressed, raw-f32) wire bytes of one full gradient push."""
+        S, L = self.num_shards, self.shard_len
+        comp = S * L + S * (L // self.block) * 4
+        return (comp if self.compress else S * L * 4), S * L * 4
+
+    # -------------------------------------------------------------- pull --
+
+    def pull(self, worker: int = 0):
+        """Bounded-stale parameter fetch: returns ``(params, epoch)``.
+
+        One cheap READ of the epoch word decides freshness; only when the
+        worker's cached view is more than ``staleness`` epochs behind does
+        the pull READ the parameter shards. Guarantee: the returned epoch
+        is never older than ``current - staleness``.
+        """
+        t = self.transport
+        cur = int(t.read(self._epoch, jnp.zeros((1,), jnp.int32))[0])
+        cached = self._cache.get(worker)
+        if cached is not None and cur - cached.epoch <= self.staleness:
+            return cached.tree, cached.epoch
+        shards = t.read(self._params,
+                        jnp.arange(self.num_shards, dtype=jnp.int32))
+        tree = self._to_tree(shards)
+        self._cache[worker] = _Cache(tree, cur)
+        return tree, cur
+
+    # -------------------------------------------------------------- push --
+
+    def push(self, grads, worker: int = 0) -> int:
+        """Push one gradient: compress (error feedback), route the codes to
+        their owner shards, apply server-side, bump the epoch counter.
+        Returns the new epoch."""
+        flat = self._to_shards(ravel_pytree(grads)[0])
+        if self.compress:
+            res = self._residuals.get(worker)
+            if res is None:
+                res = jnp.zeros_like(flat)
+            codes, scale, self._residuals[worker] = \
+                gc.compress_with_feedback(flat, res, block=self.block)
+            payload = (codes.reshape(flat.shape),
+                       scale.reshape(flat.shape[0], -1))
+        else:
+            payload = (flat,)
+        recv = self.transport.run(self._push_body, payload, False)
+        g_tree = self._to_tree(recv)
+        new_tree = self.apply_fn(self._to_tree(self._params), g_tree)
+        # server-local install: the apply runs at the owner shard, so the
+        # write never crosses the wire — only pull READs and routed pushes
+        # pay bytes (the counters price exactly that)
+        self._params = self._to_shards(ravel_pytree(new_tree)[0])
+        fetched, self._epoch = self.transport.fetch_add(
+            self._epoch, jnp.zeros((1,), jnp.int32),
+            jnp.ones((1,), jnp.uint32))
+        return int(fetched[0]) + 1
+
+    def _push_body(self, *leaves):
+        """Per-shard protocol body (runs under ``transport.run``): route
+        this shard's gradient rows to their owner through the fabric's
+        fixed-buffer router, then decode the received rows.
+
+        Each fabric shard owns ``num_shards / n`` contiguous parameter
+        rows; the row->owner map is the same range partitioning as a
+        ``repro.db`` range table, so under ``MeshTransport`` a shard's
+        local slice routes to itself (the NAM modeling where every node is
+        client + server), and under ``LocalTransport`` everything loops
+        back through the counted router — either way the wire pays
+        compressed bytes.
+        """
+        t = self.transport
+        rows = leaves[0].shape[0]              # local rows on this shard
+        me = t.shard_index()
+        dest = jnp.full((rows,), me, jnp.int32)
+        if self.compress:
+            fields = {"codes": leaves[0], "scale": leaves[1]}
+        else:
+            fields = {"grad": leaves[0]}
+        res = t.route(fields, dest, cap=rows)
+        # my requests landed in receive slots [me*cap, (me+1)*cap)
+        slots = me * rows + jnp.arange(rows, dtype=jnp.int32)
+        take = lambda v: jnp.take(v, slots, axis=0)
+        if self.compress:
+            codes = take(res.fields["codes"])
+            scale = take(res.fields["scale"])
+            return gc.decompress(codes.reshape(-1, self.block),
+                                 scale.reshape(-1), codes.shape,
+                                 block=self.block)
+        return take(res.fields["grad"])
+
+    # -------------------------------------------------------- accounting --
+
+    def fabric_stats(self) -> dict:
+        """Cumulative per-verb message/byte counters (see docs/fabric.md
+        for the capacity-count semantics)."""
+        return self.transport.stats()

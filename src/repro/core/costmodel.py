@@ -111,6 +111,53 @@ def t_rdma_agg(nbytes, groups, net="rdma", nodes: int = 4,
             + t_msgs(flush_chunks * nodes, net))
 
 
+# -------------------------------------------------------- analytics §6 ----
+
+def t_allreduce(nbytes, workers: int, net="rdma"):
+    """Synchronous ring all-reduce of an `nbytes` gradient across `workers`:
+    each worker wires 2 (W-1)/W of the gradient (reduce-scatter +
+    all-gather) in 2 (W-1) messages — the §6 baseline every worker must
+    finish before any can step (the straggler pays twice: once in the
+    barrier, once here)."""
+    if workers <= 1:
+        return 0.0
+    wire = 2 * (workers - 1) / workers * nbytes
+    return t_net(wire, net) + t_msgs(2 * (workers - 1), net)
+
+
+def t_ps_pull(nbytes, shards: int, net="rdma", staleness: int = 0,
+              workers: int = 1):
+    """Expected per-step pull cost of the bounded-stale parameter server:
+    one 1-word READ of the FETCH_ADD epoch counter always, plus a full
+    `nbytes` shard READ only when the worker's cache fell more than
+    `staleness` epochs behind.  With W workers pushing round-robin a cache
+    ages ~W epochs per own step, so the refresh probability is
+    min(1, W / (k+1)) — k=0 re-READs every step, k >= W amortizes."""
+    p_refresh = min(1.0, workers / (staleness + 1))
+    return (t_msgs(1, net)
+            + p_refresh * (t_net(nbytes, net) + t_msgs(shards, net)))
+
+
+def t_ps_push(nbytes, shards: int, net="rdma", compress_ratio: float = 1.0):
+    """Per-step push cost: the routed gradient pays `compress_ratio` x
+    `nbytes` on the wire (int8 codes + per-block scales ~ 0.27 for
+    block=256) in one fixed-buffer route per shard, plus the 1-word
+    FETCH_ADD bumping the epoch."""
+    return (t_net(compress_ratio * nbytes, net) + t_msgs(shards + 1, net))
+
+
+def t_ps_step(nbytes, shards: int, net="rdma", staleness: int = 0,
+              workers: int = 1, compress_ratio: float = 1.0):
+    """One worker-step of §6 parameter-server communication (pull + push).
+    Compare against :func:`t_allreduce` at the same `nbytes`: the PS trades
+    the barrier for bounded staleness and compressed push bytes —
+    `benchmarks/fig9_ml.py` reports this prediction next to the fabric
+    transport's measured counters."""
+    return (t_ps_pull(nbytes, shards, net, staleness=staleness,
+                      workers=workers)
+            + t_ps_push(nbytes, shards, net, compress_ratio=compress_ratio))
+
+
 # ------------------------------------------------------------- OLTP §4 ----
 
 @dataclass(frozen=True)

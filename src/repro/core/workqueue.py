@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro import fabric
 
 
-def claim_ticket_ranges(head, amounts, priority=None):
+def claim_ticket_ranges(head, amounts, priority=None, transport=None):
     """Claim work-item ranges off a shared queue head with one FETCH_ADD
     per worker (paper §3.2's decentralized pull).
 
@@ -30,11 +30,14 @@ def claim_ticket_ranges(head, amounts, priority=None):
     amounts: (W,) per-worker claim sizes.
     priority: (W,) int32 arbitration order (lower first; default = worker
       order) — the same deterministic semantics as the fabric CAS.
+    transport: a fabric transport to issue (and count) the verb through;
+      None = the raw verb (uncounted).
     Returns (starts (W,), new_head (1,)): worker w owns
     [starts[w], starts[w] + amounts[w]).
     """
     idx = jnp.zeros(amounts.shape, jnp.int32)      # all hit word 0
-    return fabric.fetch_add(head, idx, amounts, priority=priority)
+    return (transport or fabric).fetch_add(head, idx, amounts,
+                                           priority=priority)
 
 
 @dataclass

@@ -26,6 +26,11 @@ def main():
     ap.add_argument("--checkpoint-every", type=int, default=20)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--sync-mode", default="allreduce",
+                    help="'allreduce' (fused step) or "
+                         "'paramserver(staleness=k)' — §6 NAM parameter "
+                         "server with bounded-stale pulls and compressed "
+                         "pushes (docs/analytics.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -34,13 +39,20 @@ def main():
     tcfg = TrainerConfig(steps=args.steps, global_batch=args.global_batch,
                          seq_len=args.seq_len, microbatches=args.microbatches,
                          checkpoint_dir=args.ckpt_dir,
-                         checkpoint_every=args.checkpoint_every)
+                         checkpoint_every=args.checkpoint_every,
+                         sync_mode=args.sync_mode)
     tr = Trainer(cfg, tcfg)
     resumed = tr.maybe_restore()
     print(f"[train] arch={cfg.name} resumed={resumed} start_step={tr.step}")
     log = tr.run()
     for step, loss in log:
         print(f"step {step:6d}  loss {loss:.4f}")
+    if tr.comm_log:
+        c = tr.comm_log[-1]
+        print(f"[train] ps comm: push {c['push_wire_bytes']:,}B compressed "
+              f"(f32 {c['grad_bytes_f32']:,}B) "
+              f"model t_ps_step={c['t_ps_step_model_s'] * 1e3:.3f}ms vs "
+              f"t_allreduce={c['t_allreduce_model_s'] * 1e3:.3f}ms")
     print(f"[train] done at step {tr.step}")
 
 

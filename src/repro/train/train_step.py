@@ -108,47 +108,68 @@ def decode_state_shardings(cfg, policy, state_shapes):
         axes, state_shapes, is_leaf=lambda x: isinstance(x, tuple))
 
 
-def build_train_step(cfg, opt: Optimizer, *, max_grad_norm: float = 1.0,
-                     microbatches: int = 1):
-    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
-    Must be called (and lowered) under ``set_policy``.
-
-    microbatches > 1: gradient accumulation over a scan — divides the
-    activation live-set by M at the cost of an f32 grad accumulator."""
-    policy = current_policy()
-
+def _loss_and_grads(cfg, params, batch, microbatches: int):
+    """(loss, grads), with microbatches > 1 accumulating over a scan —
+    divides the activation live-set by M at the cost of an f32 grad
+    accumulator."""
     def grads_of(params, batch):
         return jax.value_and_grad(lambda p: api.loss_fn(cfg, p, batch))(params)
 
+    if microbatches == 1:
+        return grads_of(params, batch)
+
+    def split(x):
+        b = x.shape[0]
+        assert b % microbatches == 0, (b, microbatches)
+        return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+    mbs = jax.tree.map(split, batch)
+
+    def body(acc, mb):
+        loss_sum, g_acc = acc
+        loss, g = grads_of(params, mb)
+        g_acc = jax.tree.map(jnp.add, g_acc, g)
+        return (loss_sum + loss, g_acc), None
+
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), zeros), mbs)
+    return loss / microbatches, jax.tree.map(lambda g: g / microbatches,
+                                             grads)
+
+
+def build_train_step(cfg, opt: Optimizer, *, max_grad_norm: float = 1.0,
+                     microbatches: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+    Must be called (and lowered) under ``set_policy``."""
+    policy = current_policy()
+
     def step(params, opt_state, batch):
         with set_policy(policy):
-            if microbatches == 1:
-                loss, grads = grads_of(params, batch)
-            else:
-                def split(x):
-                    b = x.shape[0]
-                    assert b % microbatches == 0, (b, microbatches)
-                    return x.reshape((microbatches, b // microbatches)
-                                     + x.shape[1:])
-                mbs = jax.tree.map(split, batch)
-
-                def body(acc, mb):
-                    loss_sum, g_acc = acc
-                    loss, g = grads_of(params, mb)
-                    g_acc = jax.tree.map(jnp.add, g_acc, g)
-                    return (loss_sum + loss, g_acc), None
-
-                zeros = jax.tree.map(
-                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
-                (loss, grads), _ = jax.lax.scan(
-                    body, (jnp.float32(0.0), zeros), mbs)
-                loss = loss / microbatches
-                grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss, grads = _loss_and_grads(cfg, params, batch, microbatches)
             grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
             new_params, new_state = opt.update(grads, opt_state, params)
             metrics = {"loss": loss, "grad_norm": gnorm,
                        "step": new_state["count"]}
             return new_params, new_state, metrics
+
+    return step
+
+
+def build_grad_step(cfg, *, max_grad_norm: float = 1.0,
+                    microbatches: int = 1):
+    """The compute half of :func:`build_train_step`:
+    step(params, batch) -> (grads, metrics), no optimizer apply — for sync
+    layers that install updates elsewhere (the §6 parameter server pushes
+    these clipped grads through the fabric; see repro.analytics)."""
+    policy = current_policy()
+
+    def step(params, batch):
+        with set_policy(policy):
+            loss, grads = _loss_and_grads(cfg, params, batch, microbatches)
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+            return grads, {"loss": loss, "grad_norm": gnorm}
 
     return step
 

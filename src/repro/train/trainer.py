@@ -8,9 +8,16 @@
   step-time skew is tracked and logged (slow-step watchdog).
 - elastic: restore works onto a different mesh/policy (see
   CheckpointManager.restore).
+- sync mode: ``allreduce`` (the fused jitted step — gradients move on the
+  collective axis) or ``paramserver(staleness=k)`` — parameters live in the
+  §6 NAM parameter server (repro.analytics): each step pulls a bounded-
+  stale view, computes grads, and pushes them compressed through the
+  fabric router; the trainer logs the §6 cost-model prediction against the
+  transport's measured byte counters (see docs/analytics.md).
 """
 from __future__ import annotations
 
+import re
 import time
 from dataclasses import dataclass, field
 
@@ -18,11 +25,26 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.core import costmodel
 from repro.data import SyntheticLM
 from repro.models import api
 from repro.sharding import current_policy, set_policy
 from repro.train import train_step as ts
 from repro.train.optimizer import make_optimizer
+
+
+def parse_sync_mode(mode: str):
+    """'allreduce' -> ('allreduce', None); 'paramserver' or
+    'paramserver(staleness=k)' -> ('paramserver', k or None)."""
+    if mode == "allreduce":
+        return "allreduce", None
+    if mode == "paramserver":
+        return "paramserver", None
+    m = re.fullmatch(r"paramserver\(staleness=(\d+)\)", mode)
+    if m:
+        return "paramserver", int(m.group(1))
+    raise ValueError(f"unknown sync_mode {mode!r} — want 'allreduce', "
+                     f"'paramserver' or 'paramserver(staleness=k)'")
 
 
 @dataclass
@@ -36,6 +58,10 @@ class TrainerConfig:
     max_grad_norm: float = 1.0
     microbatches: int = 1
     slow_step_factor: float = 3.0   # watchdog threshold vs trailing mean
+    sync_mode: str = "allreduce"    # or "paramserver(staleness=k)"
+    ps_staleness: int = 0           # default k if sync_mode doesn't carry one
+    ps_compress: bool = True        # int8+EF push path (grad_compress)
+    ps_block: int = 256             # compression block size
 
 
 class Trainer:
@@ -50,16 +76,27 @@ class Trainer:
             modality=((cfg.num_modality_tokens, cfg.modality_dim)
                       if cfg.modality_dim else None))
         self.ckpt = CheckpointManager(tcfg.checkpoint_dir)
-        self.step_fn = jax.jit(
-            ts.build_train_step(cfg, self.opt,
-                                max_grad_norm=tcfg.max_grad_norm,
-                                microbatches=tcfg.microbatches),
-            donate_argnums=(0, 1))
+        self.sync_mode, k = parse_sync_mode(tcfg.sync_mode)
+        self.ps_staleness = tcfg.ps_staleness if k is None else k
+        if self.sync_mode == "paramserver":
+            self.step_fn = None
+            self.grad_fn = jax.jit(
+                ts.build_grad_step(cfg, max_grad_norm=tcfg.max_grad_norm,
+                                   microbatches=tcfg.microbatches))
+        else:
+            self.step_fn = jax.jit(
+                ts.build_train_step(cfg, self.opt,
+                                    max_grad_norm=tcfg.max_grad_norm,
+                                    microbatches=tcfg.microbatches),
+                donate_argnums=(0, 1))
+            self.grad_fn = None
+        self.ps = None
         self.params = None
         self.opt_state = None
         self.step = 0
         self.step_times = []
         self.metrics_log = []
+        self.comm_log = []
 
     # ----------------------------------------------------------- state --
 
@@ -67,11 +104,32 @@ class Trainer:
         self.params = api.init_params(self.cfg, jax.random.PRNGKey(seed))
         self.opt_state = self.opt.init(self.params)
         self.step = 0
+        if self.sync_mode == "paramserver":
+            self._make_ps()
+
+    def _make_ps(self):
+        """(Re)seed the NAM parameter server from self.params; the server
+        applies this trainer's optimizer on push."""
+        from repro.analytics import ParameterServer
+
+        def apply(params, grads):
+            new_params, self.opt_state = self.opt.update(
+                grads, self.opt_state, params)
+            return new_params
+
+        self.ps = ParameterServer(
+            self.params, staleness=self.ps_staleness,
+            compress=self.tcfg.ps_compress, block=self.tcfg.ps_block,
+            apply_fn=apply)
 
     def _tree(self):
         return {"params": self.params, "opt": self.opt_state}
 
     def save(self, async_: bool = True):
+        if self.ps is not None:
+            # materialize the server-side view only at this boundary — the
+            # steady-state loop never needs the full tree copy
+            self.params = self.ps.current_params()
         self.ckpt.save(self.step, self._tree(),
                        extra={"data": self.data.state_dict(),
                               "step": self.step}, async_=async_)
@@ -85,6 +143,8 @@ class Trainer:
         self.params, self.opt_state = tree["params"], tree["opt"]
         self.step = int(manifest["extra"]["step"])
         self.data.load_state_dict(manifest["extra"]["data"])
+        if self.sync_mode == "paramserver":
+            self._make_ps()            # re-seed regions from the restore
         return True
 
     # ------------------------------------------------------------- run --
@@ -98,14 +158,21 @@ class Trainer:
             batch = {k: jax.numpy.asarray(v)
                      for k, v in self.data.next_batch().items()}
             t0 = time.perf_counter()
-            self.params, self.opt_state, m = self.step_fn(
-                self.params, self.opt_state, batch)
+            if self.ps is not None:
+                view, _epoch = self.ps.pull()
+                grads, m = self.grad_fn(view, batch)
+                self.ps.push(grads)
+            else:
+                self.params, self.opt_state, m = self.step_fn(
+                    self.params, self.opt_state, batch)
             loss = float(m["loss"])
             dt = time.perf_counter() - t0
             self.step += 1
             self._watchdog(dt)
             if self.step % self.tcfg.log_every == 0:
                 self.metrics_log.append((self.step, loss))
+                if self.ps is not None:
+                    self.comm_log.append(self._comm_entry())
             if self.step % self.tcfg.checkpoint_every == 0:
                 self.save(async_=True)
             if preempt_at is not None and self.step >= preempt_at:
@@ -114,6 +181,22 @@ class Trainer:
         self.ckpt.wait()
         self.save(async_=False)
         return self.metrics_log
+
+    def _comm_entry(self) -> dict:
+        """§6 comm-cost model prediction next to the fabric transport's
+        measured per-verb counters (cumulative — see docs/fabric.md)."""
+        comp, raw = self.ps.wire_bytes_per_push()
+        workers = max(jax.device_count(), 2)   # modeled fleet size: the
+        # same W prices both schemes, so the comparison is apples-to-apples
+        predicted = costmodel.t_ps_step(
+            raw, self.ps.num_shards, staleness=self.ps.staleness,
+            workers=workers, compress_ratio=comp / raw)
+        baseline = costmodel.t_allreduce(raw, workers)
+        measured = {k: dict(v) for k, v in self.ps.fabric_stats().items()}
+        return {"step": self.step, "t_ps_step_model_s": predicted,
+                "t_allreduce_model_s": baseline,
+                "push_wire_bytes": comp, "grad_bytes_f32": raw,
+                "fabric": measured}
 
     def _watchdog(self, dt: float):
         self.step_times.append(dt)

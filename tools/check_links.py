@@ -1,0 +1,74 @@
+"""Markdown link checker (stdlib only — runs in CI's docs job and
+`make docs-check`).
+
+Checks every ``[text](target)`` in the given files/directories:
+
+  * relative file targets must exist (resolved against the file's dir);
+  * ``#anchor`` fragments must match a heading in the target file
+    (GitHub slug rules: lowercase, spaces -> '-', punctuation dropped);
+  * http(s)/mailto targets are skipped (no network in CI).
+
+Usage: python tools/check_links.py README.md docs [more files/dirs...]
+Exits 1 listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown/punctuation, lowercase,
+    spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    text = md_path.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)        # headings in code blocks
+    return {github_slug(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(md_path: Path) -> list:
+    errors = []
+    text = md_path.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md_path.parent / path_part).resolve() if path_part \
+            else md_path
+        if not dest.exists():
+            errors.append(f"{md_path}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"{md_path}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    files = []
+    for arg in argv or ["README.md", "docs"]:
+        p = Path(arg)
+        files.extend(sorted(p.rglob("*.md")) if p.is_dir() else [p])
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -18,8 +18,8 @@ bench-fig6:      ## RSI message economics (fabric transport counters)
 bench-fig9:      ## §6 parameter server vs sync all-reduce under skew
 	PYTHONPATH=src python -m benchmarks.run --only fig9
 
-docs-check:      ## markdown link check over README.md + docs/
-	python tools/check_links.py README.md docs
+docs-check:      ## markdown link+reachability check over README.md + docs/
+	python tools/check_links.py --root README.md README.md docs
 
 dev-deps:        ## install test-only deps (pytest, hypothesis)
 	pip install -r requirements-dev.txt

@@ -1,9 +1,13 @@
 """Fig 2/3 surrogate: network throughput/latency + CPU overhead curves.
 
 Real NICs are absent; the InfiniBand/Ethernet side comes from the paper's
-calibrated model (repro.core.costmodel). What IS measured here: the local
+calibrated ``NetworkProfile`` presets (repro.fabric.netsim — the §3
+microbenchmark numbers as data).  What IS measured here: the local
 memory-bandwidth constant c_mem (the paper's comparison baseline) and the
-per-op dispatch overhead of the one-sided-style ops (the 450-cycle analogue).
+per-op dispatch overhead of the one-sided-style ops (the 450-cycle
+analogue).  The modeled rows sweep the profile axis: per-message latency
+(setup + per-message + wire) and the effective bandwidth it implies per
+message size — the shape of the paper's Fig 2 curves.
 """
 import time
 
@@ -12,7 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import fabric
-from repro.core import costmodel
+from repro.fabric import netsim
+
+DEFAULT_PROFILES = tuple(netsim.PROFILES)       # fig2 IS the axis figure
 
 
 def _timeit(f, *args, n=5):
@@ -24,7 +30,8 @@ def _timeit(f, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
-def run():
+def run(profiles=None):
+    profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
     # measured: local memory copy bandwidth (c_mem calibration)
     for mb in (1, 16, 64):
@@ -45,15 +52,21 @@ def run():
     rows.append(("fig2/fabric_fetch_add_256reqs",
                  _timeit(jax.jit(fabric.fetch_add), words, idx,
                          jnp.ones(256, jnp.uint32)), ""))
-    # modeled: paper's latency curves (1/2 RTT) per message size
+    # modeled: the paper's latency/bandwidth curves per message size, one
+    # per profile preset (setup + binding per-message stage + wire)
     for size in (8, 256, 2048, 32768, 1 << 20):
-        for net in ("ipoeth", "ipoib", "rdma"):
-            lat_us = (costmodel.t_net(size, net)
-                      + {"ipoeth": 30e-6, "ipoib": 20e-6,
-                         "rdma": 1e-6}[net]) * 1e6
-            rows.append((f"fig2/model_latency_{net}_{size}B", lat_us,
-                         f"{size/ (lat_us/1e6) / 1e9:.2f}GB/s"))
-    # modeled: per-message CPU cycles (Fig 3)
-    for net, cyc in costmodel.CYCLES_PER_MSG.items():
-        rows.append((f"fig3/model_cpu_cycles_{net}", 0.0, f"{cyc}cycles"))
-    return rows
+        for name in profiles:
+            p = netsim.get_profile(name)
+            lat_us = p.t_call(1, size) * 1e6
+            rows.append((f"fig2/model_latency_{name}_{size}B", lat_us,
+                         f"{size / (lat_us / 1e6) / 1e9:.2f}GB/s_"
+                         f"{p.bound(1, size)}_bound"))
+    # modeled: per-message CPU cycles (Fig 3) and NIC rate caps (Fig 4)
+    for name in profiles:
+        p = netsim.get_profile(name)
+        rows.append((f"fig3/model_cpu_cycles_{name}", 0.0,
+                     f"{int(p.cycles_per_msg)}cycles"))
+        rows.append((f"fig4/model_msg_rate_{name}",
+                     p.msg_rate / 1e6, "Mmsgs/s"))
+    return rows, {"profiles": {n: vars(netsim.get_profile(n))
+                               for n in profiles}}

@@ -12,6 +12,11 @@ Three layers, per the repro methodology:
 
 Paper's measured endpoints at 70 clients: SN/IPoEth ~32K, SN/IPoIB ~22K,
 SM/2-sided ~1.1M (peak, degrading), NAM/RSI ~1.8M (network-capped 2.4M).
+
+With a profile sweep (``--profile all``) the measured per-commit counters
+are additionally converted to modeled wall-clock on every point of the
+1GbE -> EDR axis, plus the per-profile RNIC bandwidth bound on RSI — the
+"same counters, different wire" view (docs/netsim.md).
 """
 import time
 
@@ -21,7 +26,9 @@ import numpy as np
 
 from repro.configs.paper_nam import OLTP
 from repro.core import costmodel, rsi
-from repro.fabric import LocalTransport
+from repro.fabric import LocalTransport, netsim
+
+DEFAULT_PROFILES = tuple(netsim.PROFILES)     # fig6's axis is the wire
 
 
 def _measured_local_txn_rate():
@@ -71,7 +78,8 @@ def model_curves(clients=70):
     return out
 
 
-def run():
+def run(profiles=None):
+    profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
     rate, us, T, stats = _measured_local_txn_rate()
     rows.append(("fig6/measured_rsi_commit_local", us,
@@ -92,4 +100,30 @@ def run():
     c = model_curves(70)
     assert c["nam_rsi"] > c["sm_2sided"] > c["sn_ipoeth"] > 0
     rows.append(("fig6/ordering_nam>2sided>ipoeth", 0.0, "holds"))
-    return rows, {"fabric": stats}
+    # same counters, different wire: the measured commit's modeled
+    # wall-clock per txn + the RSI RNIC bandwidth bound, per profile
+    m = costmodel.OltpModel()
+    modeled = {}
+    for pname in profiles:
+        p = netsim.get_profile(pname)
+        wire_s = p.modeled_time(stats)
+        modeled[pname] = wire_s
+        rows.append((f"fig6/modeled_commit_wire_{pname}_per_txn",
+                     wire_s / T * 1e6,
+                     f"{T / max(wire_s, 1e-12):,.0f}txn/s_wire_bound"))
+        rows.append((f"fig6/model_rsi_bw_bound_{pname}", 0.0,
+                     f"{m.trx_upper_bound_bw(p, ports=2):,.0f}txn/s"))
+    # The commit is MESSAGE-bound, so the axis ordering is not monotone:
+    # IPoIB burns more cycles/msg than 1GbE (Fig 3), which is exactly why
+    # the paper's Fig 6 shows SN/IPoIB (~22K txn/s) BELOW SN/IPoEth
+    # (~32K).  Only the one-sided profiles must strictly win, and EDR
+    # must beat FDR.
+    if {"ethernet_1g", "ipoib_fdr", "rdma_fdr4x",
+            "rdma_edr"} <= set(modeled):
+        assert modeled["rdma_fdr4x"] > modeled["rdma_edr"]
+        assert min(modeled["ethernet_1g"], modeled["ipoib_fdr"]) \
+            > modeled["rdma_fdr4x"]
+        if modeled["ipoib_fdr"] >= modeled["ethernet_1g"]:
+            rows.append(("fig6/ipoib_no_help_for_oltp", 0.0,
+                         "paper_fig6_SN_ipoib<ipoeth_reproduced"))
+    return rows, {"fabric": stats, "modeled_wire_s": modeled}

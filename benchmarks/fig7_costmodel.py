@@ -1,26 +1,55 @@
-"""Fig 7: join cost analysis curves (both subfigures) from §5.1 formulas."""
+"""Fig 7: join cost analysis curves (both subfigures) from the §5.1
+formulas, swept over the network-profile axis (docs/netsim.md).
+
+The paper's Fig 7 point is a *crossover*: on 1GbE the semi-join reduction
+(GHJ+Red) pays for almost any selectivity, on IPoIB only below ~0.8, and
+on RDMA the one-sided variants (RDMA GHJ / RRJ) beat both.  Sweeping the
+``NetworkProfile`` presets reproduces those curves in one run; the
+``crossover`` rows record the per-profile argmin so the flip is explicit
+in the CSV/JSON trajectory.
+"""
 from repro.core import costmodel
+from repro.db import Planner
+from repro.fabric import netsim
+
+DEFAULT_PROFILES = tuple(netsim.PROFILES)       # fig7 IS the axis figure
 
 
-def run():
+def run(profiles=None):
+    profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
     nr = ns = 1_000_000 * 8          # |R|=|S|=1M x 8B tuples
+    crossover = {}
     for sel in (0.1, 0.25, 0.5, 0.75, 1.0):
-        for net in ("ipoeth", "ipoib", "rdma"):
-            ghj = costmodel.t_ghj(nr, ns, net)
-            red = costmodel.t_ghj_bloom(nr, ns, net, sel)
-            rows.append((f"fig7/{net}_sel{sel}_GHJ", ghj * 1e6, ""))
-            rows.append((f"fig7/{net}_sel{sel}_GHJ+Red", red * 1e6,
+        winners = {}
+        for name in profiles:
+            prof = netsim.get_profile(name)
+            ghj = costmodel.t_ghj(nr, ns, prof)
+            red = costmodel.t_ghj_bloom(nr, ns, prof, sel)
+            rows.append((f"fig7/{name}_sel{sel}_GHJ", ghj * 1e6, ""))
+            rows.append((f"fig7/{name}_sel{sel}_GHJ+Red", red * 1e6,
                          "wins" if red < ghj else "loses"))
-        rows.append((f"fig7/rdma_sel{sel}_RDMA_GHJ",
-                     costmodel.t_rdma_ghj(nr, ns) * 1e6, ""))
-        rows.append((f"fig7/rdma_sel{sel}_RRJ",
-                     costmodel.t_rrj(nr, ns) * 1e6, ""))
+            if prof.rdma:
+                rows.append((f"fig7/{name}_sel{sel}_RDMA_GHJ",
+                             costmodel.t_rdma_ghj(nr, ns) * 1e6, ""))
+                rows.append((f"fig7/{name}_sel{sel}_RRJ",
+                             costmodel.t_rrj(nr, ns) * 1e6, ""))
+            alts = Planner(net=name).join_alternatives(nr, ns, sel)
+            winners[name] = Planner.chosen(alts)
+        crossover[sel] = winners
+        rows.append((f"fig7/crossover_sel{sel}", 0.0,
+                     "|".join(f"{p}:{w}" for p, w in winners.items())))
     # paper claims encoded:
     assert costmodel.t_ghj_bloom(nr, ns, "ipoeth", 0.5) \
         < costmodel.t_ghj(nr, ns, "ipoeth")           # reduction wins on eth
     assert costmodel.t_ghj_bloom(nr, ns, "ipoib", 0.9) \
         > costmodel.t_ghj(nr, ns, "ipoib")            # loses at sel>0.8 IPoIB
     assert costmodel.t_rrj(nr, ns) <= costmodel.t_rdma_ghj(nr, ns)
+    if len(profiles) > 1:
+        # the axis must flip the argmin somewhere (the paper's thesis)
+        assert any(len(set(w.values())) > 1 for w in crossover.values()), \
+            f"no planner crossover across {profiles}"
     rows.append(("fig7/claims", 0.0, "all_hold"))
-    return rows
+    return rows, {"crossover": {str(s): w for s, w in crossover.items()},
+                  "profiles": {n: vars(netsim.get_profile(n))
+                               for n in profiles}}

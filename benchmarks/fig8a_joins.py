@@ -4,9 +4,13 @@ bloom selectivities {0.25, 0.5, 0.75, 1.0}, through the ``repro.db`` facade.
 |R|=|S| scaled to 2^20/node for the CPU container (paper: 128M/node).  The
 query is ONE logical plan — ``scan(R).join(scan(S).filter(sel)).aggregate``
 — the network-aware planner picks a variant from the §5.1 cost model (one
-row per selectivity reports its choice), and the figure's grid then *forces*
-each of the four variants so the measured deltas isolate the
-shuffle/partition strategy, as in the paper.
+row per selectivity AND per network profile reports its choice: sweeping
+``--profile all`` reproduces the paper's crossover, e.g. GHJ+Red on 1GbE
+vs RRJ on EDR), and the figure's grid then *forces* each of the four
+variants so the measured deltas isolate the shuffle/partition strategy, as
+in the paper.  Device work runs ONCE — the counted traffic is re-priced
+per profile (``modeled_wire_s``), since counters are workload and profiles
+are the axis (docs/netsim.md).
 """
 import time
 
@@ -14,7 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.db import JOIN_VARIANTS, Database
-from repro.fabric import MeshTransport
+from repro.fabric import MeshTransport, netsim
+
+DEFAULT_PROFILES = ("rdma_fdr4x",)       # the paper's measured cluster
 
 
 def _rel(sel: float, n: int = 1 << 20):
@@ -29,23 +35,33 @@ def _rel(sel: float, n: int = 1 << 20):
     return rk, rv, sk, jnp.ones((n,), jnp.uint32)
 
 
-def run():
+def run(profiles=None):
+    profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
     n = 1 << 20
     mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
-    db = Database(transport=MeshTransport(mesh, "data"))
+    db = Database(transport=MeshTransport(mesh, "data",
+                                          profile=profiles[0]))
     db.create_table("R", n, payload_words=1, partitioning="hash")
     db.create_table("S", n, payload_words=1, partitioning="hash")
+    crossover = {}
     for sel in (0.25, 0.5, 0.75, 1.0):
         rk, rv, sk, sv = _rel(sel)
         db.table("R").load(rk, rv)
         db.table("S").load(sk, sv)
         q = db.scan("R").join(db.scan("S").filter(sel=sel)).aggregate()
-        ex = db.explain(q)
-        costs = "|".join(f"{a.name}:{a.cost_s * 1e3:.1f}ms"
-                         for a in ex.alternatives)
-        rows.append((f"fig8a/sel{sel}_planner", 0.0,
-                     f"picked_{ex.chosen}_{costs}"))
+        winners = {}
+        for pname in profiles:
+            ex = db.explain(q, profile=pname)
+            winners[pname] = ex.chosen
+            costs = "|".join(f"{a.name}:{a.cost_s * 1e3:.1f}ms"
+                             for a in ex.alternatives)
+            rows.append((f"fig8a/sel{sel}_planner_{pname}", 0.0,
+                         f"picked_{ex.chosen}_{costs}"))
+        crossover[sel] = winners
+        if len(profiles) > 1:
+            rows.append((f"fig8a/sel{sel}_crossover", 0.0,
+                         "|".join(f"{p}:{w}" for p, w in winners.items())))
         base = None
         for name in JOIN_VARIANTS:              # forced grid for the figure
             r = db.execute(q, force_variant=name)   # warm/compile
@@ -57,4 +73,15 @@ def run():
                 base = us
             rows.append((f"fig8a/sel{sel}_{name}", us,
                          f"{base/us:.2f}x_vs_GHJ" if base else ""))
-    return rows, {"fabric": db.fabric_stats()}
+    if len(profiles) > 1:
+        # acceptance: the join-variant argmin must differ on >= 2 profiles
+        assert any(len(set(w.values())) > 1 for w in crossover.values()), \
+            f"no join-variant crossover across {profiles}"
+    stats = db.fabric_stats()
+    modeled = {p: netsim.get_profile(p).modeled_time(stats)
+               for p in profiles}
+    for pname, s in modeled.items():
+        rows.append((f"fig8a/modeled_wire_{pname}", s * 1e6,
+                     "all_counted_traffic"))
+    return rows, {"fabric": stats, "modeled_wire_s": modeled,
+                  "crossover": {str(s): w for s, w in crossover.items()}}

@@ -20,8 +20,12 @@ the fleet.  This figure injects a compute-time skew (one worker
 Compute time is a virtual clock (the skew is injected, deterministically);
 every fabric operation runs for real through a counted transport, and each
 mode's *measured* per-verb message/byte counters are converted to wire
-time with the §2 constants (``t_net`` + ``t_msgs``) and reported next to
-the §6 cost-model prediction (``t_ps_step`` / ``t_allreduce``).
+time with the active :class:`~repro.fabric.NetworkProfile` (``t_net`` +
+``t_msgs``) and reported next to the §6 cost-model prediction
+(``t_ps_step`` / ``t_allreduce``).  A ``--profile all`` sweep replays the
+event loop per profile — the wire time feeds the workers' virtual clocks,
+so the schedule itself (who claims which ticket) is a function of the
+network, exactly the paper's point.
 
 Claim reproduced: bounded-stale PS beats the synchronous barrier wall-clock
 under skew, and a larger staleness bound pays fewer pull bytes.
@@ -32,14 +36,14 @@ from jax.flatten_util import ravel_pytree
 
 from repro.analytics import DEFAULT_SHARDS, ParameterServer
 from repro.core import costmodel, workqueue
-from repro.fabric import LocalTransport
+from repro.fabric import LocalTransport, netsim
 from repro.train import grad_compress as gc
 
 WORKERS = 4
 STRAGGLER_FACTOR = 4.0          # worker 0 is 4x slower
 BASE_COMPUTE_S = 10e-3          # virtual per-batch compute time
 TOTAL_BATCHES = 48
-NET = "rdma"
+DEFAULT_PROFILES = ("rdma_fdr4x",)
 PARAM_SHAPE = {"w": (256, 64), "b": (64,)}
 
 
@@ -55,11 +59,11 @@ def _grad(ticket: int):
             for i, (k, s) in enumerate(sorted(PARAM_SHAPE.items()))}
 
 
-def _wire_time(stats_delta: dict) -> float:
-    """Measured counters -> seconds with the §2 constants."""
-    nbytes = sum(v["bytes"] for v in stats_delta.values())
-    msgs = sum(v["msgs"] for v in stats_delta.values())
-    return costmodel.t_net(nbytes, NET) + costmodel.t_msgs(msgs, NET)
+def _wire_time(stats_delta: dict, prof) -> float:
+    """Measured counters -> seconds with the profile's §3 constants
+    (setup + per-message + bandwidth, same pricing as every other
+    figure's modeled time)."""
+    return prof.modeled_time(stats_delta)
 
 
 def _delta(transport, before: dict) -> dict:
@@ -72,7 +76,7 @@ def _delta(transport, before: dict) -> dict:
     return out
 
 
-def _run_sync(compute_s):
+def _run_sync(compute_s, prof):
     """Barrier per step: everyone waits for the slowest, then all-reduces
     the raw f32 gradient (one counted psum per step)."""
     transport = LocalTransport()
@@ -86,17 +90,20 @@ def _run_sync(compute_s):
         nbytes = sum(v["bytes"] for v in d.values())
         # ring all-reduce: 2(W-1)/W of the counted bytes on the wire,
         # 2(W-1) messages — the same terms t_allreduce prices, so the
-        # measured row is comparable to fig9/model_t_allreduce
-        wall += (max(compute_s)
+        # measured row is comparable to fig9/model_t_allreduce — plus one
+        # posted-collective setup, matching the per-call term the PS's
+        # verbs pay through modeled_time
+        wall += (max(compute_s) + prof.setup_s
                  + costmodel.t_net(2 * (WORKERS - 1) / WORKERS * nbytes,
-                                   NET)
-                 + costmodel.t_msgs(2 * (WORKERS - 1), NET))
+                                   prof)
+                 + costmodel.t_msgs(2 * (WORKERS - 1), prof))
     return wall, transport.stats()
 
 
-def _run_ps(compute_s, staleness: int):
+def _run_ps(compute_s, staleness: int, prof):
     """Decentralized: each worker claims tickets off the shared FETCH_ADD
-    head counter as soon as it is free (event loop on the virtual clock)."""
+    head counter as soon as it is free (event loop on the virtual clock —
+    the wire share of the clock comes from the network profile)."""
     transport = LocalTransport()
     ps = ParameterServer(_params(), transport=transport,
                          staleness=staleness, block=256)
@@ -113,18 +120,16 @@ def _run_ps(compute_s, staleness: int):
             break
         ps.pull(worker=w)                       # bounded-stale READ
         ps.push(_grad(ticket), worker=w)        # compressed routed push
-        clock[w] += compute_s[w] + _wire_time(_delta(transport, before))
+        clock[w] += compute_s[w] + _wire_time(_delta(transport, before),
+                                              prof)
         done += 1
     return max(clock), transport.stats()
 
 
-def run():
-    rows = []
-    compute_s = [BASE_COMPUTE_S] * WORKERS
-    compute_s[0] *= STRAGGLER_FACTOR
-
-    sync_wall, sync_stats = _run_sync(compute_s)
-    rows.append(("fig9/sync_allreduce_wallclock", sync_wall * 1e6,
+def _run_one_profile(pname, compute_s, rows, prefix):
+    prof = netsim.get_profile(pname)
+    sync_wall, sync_stats = _run_sync(compute_s, prof)
+    rows.append((f"fig9/{prefix}sync_allreduce_wallclock", sync_wall * 1e6,
                  f"steps{TOTAL_BATCHES // WORKERS}_"
                  f"straggler{STRAGGLER_FACTOR:g}x"))
 
@@ -133,40 +138,56 @@ def run():
     ps_stats = {}
     ps_walls = {}
     for k in (0, 8):
-        wall, stats = _run_ps(compute_s, staleness=k)
+        wall, stats = _run_ps(compute_s, k, prof)
         ps_walls[k], ps_stats[f"ps_k{k}"] = wall, stats
         speedup = sync_wall / wall
         beats = "beats_sync" if wall < sync_wall else "SLOWER_than_sync"
-        rows.append((f"fig9/ps_k{k}_wallclock", wall * 1e6,
+        rows.append((f"fig9/{prefix}ps_k{k}_wallclock", wall * 1e6,
                      f"{beats}_x{speedup:.2f}"))
         pull_bytes = stats.get("read", {}).get("bytes", 0)
         push_bytes = stats.get("route", {}).get("bytes", 0)
-        rows.append((f"fig9/ps_k{k}_push_bytes", float(push_bytes),
+        rows.append((f"fig9/{prefix}ps_k{k}_push_bytes", float(push_bytes),
                      f"compressed_vs_f32_{raw_bytes * TOTAL_BATCHES}"))
-        rows.append((f"fig9/ps_k{k}_pull_bytes", float(pull_bytes),
+        rows.append((f"fig9/{prefix}ps_k{k}_pull_bytes", float(pull_bytes),
                      "staleness_gated"))
 
     # §6 cost model prediction next to the measured economics
     model = {
-        "t_allreduce_s": costmodel.t_allreduce(raw_bytes, WORKERS, NET),
+        "t_allreduce_s": costmodel.t_allreduce(raw_bytes, WORKERS, prof),
         "t_ps_step_k0_s": costmodel.t_ps_step(
-            raw_bytes, DEFAULT_SHARDS, NET, staleness=0, workers=WORKERS,
+            raw_bytes, DEFAULT_SHARDS, prof, staleness=0, workers=WORKERS,
             compress_ratio=comp_bytes / raw_bytes),
         "t_ps_step_k8_s": costmodel.t_ps_step(
-            raw_bytes, DEFAULT_SHARDS, NET, staleness=8, workers=WORKERS,
+            raw_bytes, DEFAULT_SHARDS, prof, staleness=8, workers=WORKERS,
             compress_ratio=comp_bytes / raw_bytes),
     }
-    rows.append(("fig9/model_t_allreduce", model["t_allreduce_s"] * 1e6,
-                 "per_step"))
-    rows.append(("fig9/model_t_ps_step_k8",
+    rows.append((f"fig9/{prefix}model_t_allreduce",
+                 model["t_allreduce_s"] * 1e6, "per_step"))
+    rows.append((f"fig9/{prefix}model_t_ps_step_k8",
                  model["t_ps_step_k8_s"] * 1e6, "per_step"))
-    extras = {"fabric": ps_stats, "sync_fabric": sync_stats,
-              "model": model,
-              "workers": WORKERS, "straggler_factor": STRAGGLER_FACTOR,
-              "total_batches": TOTAL_BATCHES,
-              "grad_bytes_f32": raw_bytes,
-              "grad_bytes_compressed": comp_bytes,
-              "wallclock_s": {"sync": sync_wall,
-                              **{f"ps_k{k}": w
-                                 for k, w in ps_walls.items()}}}
+    return {"fabric": ps_stats, "sync_fabric": sync_stats, "model": model,
+            "grad_bytes_f32": raw_bytes,
+            "grad_bytes_compressed": comp_bytes,
+            "wallclock_s": {"sync": sync_wall,
+                            **{f"ps_k{k}": w
+                               for k, w in ps_walls.items()}}}
+
+
+def run(profiles=None):
+    profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
+    rows = []
+    compute_s = [BASE_COMPUTE_S] * WORKERS
+    compute_s[0] *= STRAGGLER_FACTOR
+    per_profile = {}
+    for pname in profiles:
+        prefix = f"{pname}_" if len(profiles) > 1 else ""
+        per_profile[pname] = _run_one_profile(pname, compute_s, rows,
+                                              prefix)
+    extras = {"workers": WORKERS, "straggler_factor": STRAGGLER_FACTOR,
+              "total_batches": TOTAL_BATCHES}
+    if len(profiles) == 1:
+        extras.update(per_profile[profiles[0]])
+        extras["profile"] = profiles[0]
+    else:
+        extras["profiles"] = per_profile
     return rows, extras

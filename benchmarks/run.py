@@ -1,11 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6] [--json DIR]
+  PYTHONPATH=src python -m benchmarks.run [--figure fig8a]
+                                          [--profile rdma_edr | all]
+                                          [--json DIR]
 
 Prints ``name,us_per_call,derived`` CSV. With ``--json DIR``, also writes a
 machine-readable ``BENCH_<figure>.json`` per figure (rows plus the fabric
 transport's per-verb message/byte counters when the figure measures them)
 so the perf trajectory is comparable across PRs.
+
+``--profile`` selects the network profile(s) the modeled/planned parts run
+under (``repro.fabric.netsim`` presets; ``all`` sweeps the paper's whole
+1GbE -> IPoIB -> FDR -> EDR axis).  Measured figures run their device work
+ONCE — counters are workload, profiles are the axis — and re-price /
+re-plan per profile, which is how each figure emits the paper's crossover
+curves (docs/netsim.md).
 
 Fig 2/3 are model+calibration surrogates (no real NIC here); Fig 6 combines
 the measured RSI commit path with the paper's message-economics model; Fig 7
@@ -21,6 +30,7 @@ import sys
 
 from benchmarks import (fig2_microbench, fig6_rsi, fig7_costmodel,
                         fig8a_joins, fig8b_agg, fig9_ml)
+from repro.fabric import netsim
 
 MODULES = {
     "fig2": fig2_microbench,
@@ -32,9 +42,9 @@ MODULES = {
 }
 
 
-def _run_module(mod):
+def _run_module(mod, profiles):
     """Normalize run() output: rows, or (rows, extras dict)."""
-    res = mod.run()
+    res = mod.run(profiles=profiles)
     if isinstance(res, tuple):
         rows, extras = res
     else:
@@ -44,10 +54,24 @@ def _run_module(mod):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=sorted(MODULES))
+    ap.add_argument("--only", "--figure", dest="only", default=None,
+                    choices=sorted(MODULES),
+                    help="run one figure (--figure is an alias)")
+    ap.add_argument("--profile", default=None,
+                    metavar="NAME|all",
+                    help="network profile preset(s): one of "
+                         f"{sorted(netsim.PROFILES)}, a legacy key "
+                         f"({sorted(netsim.ALIASES)}), or 'all' to sweep "
+                         "the whole axis (default: each figure's own)")
     ap.add_argument("--json", default=None, metavar="DIR",
                     help="write BENCH_<figure>.json result files here")
     args = ap.parse_args()
+    if args.profile is None:
+        profiles = None                       # each module's default
+    elif args.profile == "all":
+        profiles = tuple(netsim.PROFILES)
+    else:
+        profiles = (netsim.get_profile(args.profile).name,)
     names = [args.only] if args.only else sorted(MODULES)
     if args.json:
         os.makedirs(args.json, exist_ok=True)
@@ -55,7 +79,7 @@ def main() -> None:
     failed = []
     for name in names:
         try:
-            rows, extras = _run_module(MODULES[name])
+            rows, extras = _run_module(MODULES[name], profiles)
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
@@ -65,6 +89,7 @@ def main() -> None:
         if args.json:
             payload = {
                 "figure": name,
+                "profile": (args.profile or "default"),
                 "rows": [{"name": row, "us_per_call": us,
                           "derived": derived}
                          for row, us, derived in rows],

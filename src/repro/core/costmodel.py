@@ -11,18 +11,31 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro.fabric import netsim
+
 # ---------------------------------------------------------------- paper ---
 
 C_MEM = 1e-9                       # s/byte — paper's main-memory constant
-# idealized s/byte at 2KB messages (paper §2 microbenchmarks)
-C_NET = {
-    "ipoeth": 1 / 0.125e9,         # 1 GbE
-    "ipoib":  1 / 3.5e9,           # IPoIB ceiling measured in Fig 2
-    "rdma":   1 / 6.8e9,           # FDR 4x per port
-}
+# idealized s/byte at 2KB messages (paper §3 microbenchmarks) — the values
+# live in the shipped NetworkProfile presets (repro.fabric.netsim); these
+# legacy-keyed views exist so the §4 OLTP model and older call sites keep
+# their ipoeth/ipoib/rdma spelling.
+C_NET = {k: netsim.get_profile(k).c_net for k in ("ipoeth", "ipoib",
+                                                  "rdma")}
 # per-message CPU cycles (Fig 3, small messages)
-CYCLES_PER_MSG = {"ipoeth": 7544, "ipoib": 13264, "rdma": 450}
+CYCLES_PER_MSG = {k: int(netsim.get_profile(k).cycles_per_msg)
+                  for k in ("ipoeth", "ipoib", "rdma")}
 BLOOM_ERROR = 0.10
+
+
+def _c_net(net) -> float:
+    """Resolve net to s/byte: a NetworkProfile, a preset/legacy name, or a
+    raw float (e.g. calibrated from measured fabric byte counters)."""
+    if isinstance(net, netsim.NetworkProfile):
+        return net.c_net
+    if isinstance(net, str):
+        return netsim.get_profile(net).c_net
+    return float(net)
 
 
 def t_mem(nbytes):
@@ -30,10 +43,10 @@ def t_mem(nbytes):
 
 
 def t_net(nbytes, net):
-    """net: a C_NET key, or a float s/byte (e.g. calibrated from the fabric
-    transport's measured byte counters by ``repro.db.planner``)."""
-    c = C_NET[net] if isinstance(net, str) else float(net)
-    return nbytes * c
+    """net: a NetworkProfile, a profile preset / legacy C_NET key, or a
+    float s/byte (e.g. calibrated from the fabric transport's measured
+    byte counters by ``repro.db.planner`` / ``netsim.from_counters``)."""
+    return nbytes * _c_net(net)
 
 
 def t_part(nbytes, net: str):
@@ -79,10 +92,13 @@ CPU_GHZ = 2.2                 # per-message CPU cost base (Fig 3 cluster)
 
 
 def t_msgs(n_msgs, net):
-    """Per-message CPU time (Fig 3 cycles at CPU_GHZ).  A calibrated float
-    net (s/byte) carries no message constant; bill it at the RDMA rate."""
-    cm = CYCLES_PER_MSG[net if isinstance(net, str) else "rdma"]
-    return n_msgs * cm / (CPU_GHZ * 1e9)
+    """Per-message time: the profile's binding per-message stage — host
+    CPU cycles (Fig 3) vs the NIC message-rate cap (Fig 4), whichever is
+    slower.  A calibrated float net (s/byte) carries no message constant;
+    bill it at the RDMA FDR rate."""
+    p = netsim.get_profile(net if isinstance(
+        net, (str, netsim.NetworkProfile)) else "rdma")
+    return n_msgs * p.per_message_s
 
 
 def t_dist_agg(nbytes, groups, net, nodes: int = 4,
@@ -167,19 +183,20 @@ class OltpModel:
     record_bytes: int = 1024
     records_per_txn: int = 3
 
-    def trx_upper_bound_cpu(self, n_servers: int, net: str,
+    def trx_upper_bound_cpu(self, n_servers: int, net,
                             cycles_per_msg: float = None) -> float:
-        """§4.1.3: trx_u = (c * cycles_c * (n+1)) / ((5+8n) * cycles_m)."""
-        cm = cycles_per_msg or CYCLES_PER_MSG[net]
+        """§4.1.3: trx_u = (c * cycles_c * (n+1)) / ((5+8n) * cycles_m).
+        net: a profile preset / legacy key or a NetworkProfile."""
+        cm = cycles_per_msg or netsim.get_profile(net).cycles_per_msg
         cyc = self.cores_per_node * self.ghz * 1e9
         msgs = 5 + 8 * n_servers
         return cyc * (n_servers + 1) / (msgs * cm)
 
-    def trx_upper_bound_bw(self, net: str, ports: int = 1) -> float:
+    def trx_upper_bound_bw(self, net, ports: int = 1) -> float:
         """Bandwidth cap at the bottleneck machine (paper §4.3): each txn
         reads AND writes records_per_txn * record_bytes, so the dual-port
         aggregate divides by 2x the per-txn bytes."""
-        bw = 1 / C_NET[net] * ports
+        bw = 1 / _c_net(net) * ports
         return bw / (2 * self.records_per_txn * self.record_bytes)
 
     def rsi_bound(self, n_servers: int = 3, ports: int = 2) -> float:

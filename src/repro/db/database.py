@@ -82,8 +82,12 @@ class Explain:
 class Database:
     """Tables + sessions + planner over one fabric transport."""
 
-    def __init__(self, transport=None, *, net: str = "rdma",
+    def __init__(self, transport=None, *, net="rdma",
                  model_nodes: Optional[int] = None):
+        """net: what the planner models the wire as — a
+        :class:`~repro.fabric.NetworkProfile`, a preset name
+        ("ethernet_1g" ... "rdma_edr"), or a legacy key; see
+        docs/netsim.md."""
         self.transport = transport or fabric.LocalTransport()
         self.pool = fabric.NamPool()
         nodes = (model_nodes if model_nodes is not None else
@@ -230,8 +234,16 @@ class Database:
             raise KeyError(f"no table {name!r}")
         return Plan("scan", table=name)
 
-    def _analyze(self, plan: Plan):
+    def _planner_for(self, profile) -> Planner:
+        """The db's planner, or a per-profile one (same modeled cluster)
+        for sweeping the 1GbE -> EDR axis without touching db state."""
+        if profile is None:
+            return self.planner
+        return Planner(net=profile, nodes=self.planner.nodes)
+
+    def _analyze(self, plan: Plan, planner: Optional[Planner] = None):
         """(kind, alternatives argmin-first, cost-model inputs)."""
+        planner = planner or self.planner
         kind = plan.kind()
         if kind == "join_agg":
             join = plan.children[0]
@@ -240,9 +252,10 @@ class Database:
             stab = self.table(right.scan_table())
             sel = left.selectivity() * right.selectivity()
             nr, ns = rtab.stats()["bytes"], stab.stats()["bytes"]
-            alts = self.planner.join_alternatives(nr, ns, sel)
+            alts = planner.join_alternatives(nr, ns, sel)
             return kind, alts, {"nr_bytes": nr, "ns_bytes": ns, "sel": sel,
-                                "net": self.planner.net}
+                                "net": planner.net,
+                                "profile": planner.profile.name}
         if kind == "group_agg":
             if plan.groups is None:
                 raise ValueError("a group aggregate needs "
@@ -251,22 +264,27 @@ class Database:
             child = plan.children[0]
             tab = self.table(child.scan_table())
             nb = tab.stats()["bytes"]
-            alts = self.planner.agg_alternatives(nb, plan.groups)
+            alts = planner.agg_alternatives(nb, plan.groups)
             return kind, alts, {"nbytes": nb, "groups": plan.groups,
-                                "nodes": self.planner.nodes,
-                                "net": self.planner.net}
+                                "nodes": planner.nodes,
+                                "net": planner.net,
+                                "profile": planner.profile.name}
         raise ValueError(f"cannot plan a bare {kind} — add .aggregate()")
 
-    def explain(self, plan: Plan) -> Explain:
-        """Costed alternatives for a plan, argmin first — no execution."""
-        kind, alts, inputs = self._analyze(plan)
+    def explain(self, plan: Plan, *, profile=None) -> Explain:
+        """Costed alternatives for a plan, argmin first — no execution.
+        `profile` prices the plan on another point of the network axis
+        (preset name or NetworkProfile) without changing db state."""
+        kind, alts, inputs = self._analyze(plan, self._planner_for(profile))
         return Explain(plan.describe(), kind, tuple(alts), inputs)
 
     def execute(self, plan: Plan, *, force_variant: Optional[str] = None,
                 capacity_factor: float = 2.0,
-                calibrate: bool = False) -> QueryResult:
+                calibrate: bool = False, profile=None) -> QueryResult:
         """Run a plan with the planner's choice (or `force_variant` for
         benchmark grids).  Returns value + the full costed explain.
+        `profile` plans under another network profile (the executed
+        operators are the same code; only the choice moves).
 
         calibrate=True re-runs the compiled operator once more and feeds
         the planner this shape's traced fabric byte counters plus the
@@ -274,7 +292,7 @@ class Database:
         modeled compute share, so later plans are priced with the measured
         wire rate.  Needs a fresh plan shape on this database — counters
         accumulate at trace time only (see docs/fabric.md)."""
-        kind, alts, inputs = self._analyze(plan)
+        kind, alts, inputs = self._analyze(plan, self._planner_for(profile))
         variant = force_variant or Planner.chosen(alts)
         if force_variant:
             known = {a.name for a in alts}

@@ -5,14 +5,18 @@ whether the semi-join reduction pays, whether to use the RDMA shuffle, and
 which aggregation scheme wins all depend on the network constant — so the
 choice belongs to a cost model, not the caller.  :class:`Planner` is that
 model as a component: it prices every alternative with the formulas in
-``repro.core.costmodel`` (per-transport ``C_NET``/message constants) and
-returns the full costed list, argmin first.
+``repro.core.costmodel`` against one :class:`~repro.fabric.NetworkProfile`
+(a point on the paper's 1GbE -> EDR axis, see docs/netsim.md) and returns
+the full costed list, argmin first.  Sweeping planners across profiles is
+how the figure benchmarks reproduce the paper's crossovers: the argmin
+*changes* as the profile moves along the axis.
 
 Calibration: `t_net` accepts a raw s/byte constant, so a planner can refine
-the idealized ``C_NET`` row with the *measured* economics of prior runs —
-feed :meth:`Planner.calibrate` the fabric transport's byte counters plus
-the observed wall-clock and subsequent plans are priced with the observed
-wire rate instead of the datasheet one.
+the preset profile with the *measured* economics of prior runs — feed
+:meth:`Planner.calibrate` the fabric transport's byte counters plus the
+observed wall-clock and subsequent plans are priced with the observed wire
+rate instead of the datasheet one (``netsim.from_counters`` is the
+multi-sample generalization that fits a full profile).
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ from dataclasses import dataclass, replace
 from typing import List, Optional
 
 from repro.core import costmodel
+from repro.fabric import netsim
 
 JOIN_VARIANTS = ("ghj", "ghj_bloom", "rdma_ghj", "rrj")
 AGG_VARIANTS = ("dist_agg", "rdma_agg")
@@ -49,17 +54,18 @@ def _choose(alts: List[Alternative]) -> List[Alternative]:
 class Planner:
     """Prices join/aggregation strategies for one modeled network.
 
-    net:    C_NET key ("rdma" | "ipoib" | "ipoeth") — what the fabric
-            transport is modeled as.
+    net:    a :class:`~repro.fabric.NetworkProfile`, a preset name
+            ("ethernet_1g" | "ipoib_fdr" | "rdma_fdr4x" | "rdma_edr"), or
+            a legacy C_NET key ("ipoeth" | "ipoib" | "rdma") — what the
+            fabric transport is modeled as.
     nodes:  cluster size the cost model assumes (the §5.4 deployment); the
             Database passes the transport's shard count, or the paper's
             4-node cluster for the single-shard degenerate case.
     """
 
-    def __init__(self, net: str = "rdma", nodes: int = 4):
-        if net not in costmodel.C_NET:
-            raise ValueError(f"unknown net {net!r}")
-        self.net = net
+    def __init__(self, net="rdma", nodes: int = 4):
+        self.profile = netsim.get_profile(net)    # ValueError on unknown
+        self.net = net if isinstance(net, str) else self.profile.name
         self.nodes = max(int(nodes), 1)
         self._c_net_measured: Optional[float] = None
 
@@ -107,18 +113,20 @@ class Planner:
 
     @property
     def effective_net(self):
-        """What t_net is priced with: measured s/byte if calibrated."""
+        """What t_net is priced with: the measured s/byte if calibrated,
+        else the network profile."""
         return (self._c_net_measured if self._c_net_measured is not None
-                else self.net)
+                else self.profile)
 
     # -------------------------------------------------------------- joins --
 
     def join_alternatives(self, nr_bytes: int, ns_bytes: int,
                           sel: float = 1.0) -> List[Alternative]:
         """All four §5.1/§5.2 variants, costed; argmin-first.  The RDMA
-        variants are only feasible when the modeled net is rdma."""
+        variants are only feasible when the modeled network offers
+        one-sided verbs (profile.rdma)."""
         net = self.effective_net
-        rdma_ok = self.net == "rdma"
+        rdma_ok = self.profile.rdma
         alts = [
             Alternative("ghj", costmodel.t_ghj(nr_bytes, ns_bytes, net)),
             Alternative("ghj_bloom",
@@ -144,7 +152,7 @@ class Planner:
             Alternative("rdma_agg",
                         costmodel.t_rdma_agg(nbytes, groups, net,
                                              nodes=self.nodes),
-                        feasible=self.net == "rdma"),
+                        feasible=self.profile.rdma),
         ]
         return _choose(alts)
 

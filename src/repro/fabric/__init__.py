@@ -9,10 +9,16 @@ One RDMA-style substrate for every distributed protocol in the repo:
   transports ``LocalTransport`` (one shard, no collectives) and
              ``MeshTransport(mesh, axis)`` (shard_map + all_to_all), both
              counting messages and bytes per verb
+  netsim     ``NetworkProfile`` presets for the paper's 1GbE -> EDR axis
+             (``PROFILES``); a transport bound to one accumulates modeled
+             wall-clock next to its counters, and ``from_counters()`` fits
+             a profile back from measured counters
 
 RSI commit, all four join variants, and RDMA-AGG compose against this layer
 and nothing else — the paper's "redesign the system around the verbs".
 """
+from repro.fabric.netsim import (ALIASES, PROFILES, NetworkProfile,
+                                 from_counters, get_profile)
 from repro.fabric.router import RouteResult, chunked_all_to_all, route
 from repro.fabric.transport import LocalTransport, MeshTransport, Transport
 from repro.fabric.verbs import (NamPool, Region, cas, fetch_add, read,
@@ -22,4 +28,6 @@ __all__ = [
     "NamPool", "Region", "read", "write", "cas", "fetch_add",
     "route", "RouteResult", "chunked_all_to_all",
     "Transport", "LocalTransport", "MeshTransport",
+    "NetworkProfile", "PROFILES", "ALIASES", "get_profile",
+    "from_counters",
 ]

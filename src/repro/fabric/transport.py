@@ -29,6 +29,16 @@ full regardless of fill); verb msgs count every buffer slot handed to the
 verb, which is exact under ``LocalTransport`` (cap = batch size) and an
 upper bound per shard under ``MeshTransport`` (each home shard scans its
 full n*cap receive buffer).
+
+A transport may also carry a :class:`~repro.fabric.netsim.NetworkProfile`
+(``profile=`` — a preset name like ``"rdma_edr"`` or a profile instance).
+With a profile bound, every counted verb additionally accumulates
+``modeled_s``: the wall-clock the counted traffic *would* cost on that
+network (setup + per-message + bandwidth terms, see docs/netsim.md), so a
+single run prices itself on any point of the paper's 1GbE -> EDR axis.
+``modeled_time()`` totals it — or re-prices the same counters under a
+different profile, which is how ``benchmarks/run.py --profile all`` sweeps
+the axis without re-running the workload.
 """
 from __future__ import annotations
 
@@ -38,6 +48,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.fabric import netsim
 from repro.fabric import router as _router
 from repro.fabric import verbs as _verbs
 
@@ -47,12 +58,17 @@ def _row_bytes(arr) -> int:
 
 
 class Transport:
-    """Base transport: verb dispatch + trace-time message/byte accounting."""
+    """Base transport: verb dispatch + trace-time message/byte accounting.
+
+    profile: optional network profile (name or instance) — when bound,
+    counted verbs also accumulate modeled wall-clock (``modeled_s``)."""
 
     axis: Optional[str] = None
 
-    def __init__(self):
+    def __init__(self, profile=None):
         self._stats: dict = {}
+        self.profile = (netsim.get_profile(profile)
+                        if profile is not None else None)
 
     # ------------------------------------------------------ accounting ---
 
@@ -61,13 +77,28 @@ class Transport:
         s["calls"] += 1
         s["msgs"] += int(msgs)
         s["bytes"] += int(nbytes)
+        if self.profile is not None:
+            s["modeled_s"] = (s.get("modeled_s", 0.0)
+                              + self.profile.t_call(msgs, nbytes))
 
     def stats(self) -> dict:
-        """{verb: {calls, msgs, bytes}} accumulated since reset."""
+        """{verb: {calls, msgs, bytes[, modeled_s]}} accumulated since
+        reset (``modeled_s`` only when a profile is bound)."""
         return {k: dict(v) for k, v in self._stats.items()}
 
     def reset_stats(self):
         self._stats = {}
+
+    def modeled_time(self, profile=None) -> float:
+        """Modeled wall-clock of all counted traffic.  With ``profile``
+        given, re-price the same counters under that network instead of
+        the bound one — counters are workload, profiles are the axis."""
+        p = netsim.get_profile(profile) if profile is not None \
+            else self.profile
+        if p is None:
+            raise ValueError("no profile bound to this transport — pass "
+                             "profile= here or at construction")
+        return p.modeled_time(self._stats)
 
     # ----------------------------------------------------------- verbs ---
 
@@ -166,8 +197,8 @@ class MeshTransport(Transport):
     """NAM deployment over a mesh axis: bodies run under shard_map, routed
     buffers travel on the paired (chunkable) all_to_all."""
 
-    def __init__(self, mesh, axis: str):
-        super().__init__()
+    def __init__(self, mesh, axis: str, profile=None):
+        super().__init__(profile=profile)
         self.mesh = mesh
         self.axis = axis
 

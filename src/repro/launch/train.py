@@ -53,6 +53,13 @@ def main():
               f"(f32 {c['grad_bytes_f32']:,}B) "
               f"model t_ps_step={c['t_ps_step_model_s'] * 1e3:.3f}ms vs "
               f"t_allreduce={c['t_allreduce_model_s'] * 1e3:.3f}ms")
+        for name, m in c.get("profiles", {}).items():
+            verdict = ("ps" if m["t_ps_step_model_s"]
+                       < m["t_allreduce_model_s"] else "allreduce")
+            print(f"[train]   {name:<12} t_ps_step="
+                  f"{m['t_ps_step_model_s'] * 1e3:.3f}ms "
+                  f"t_allreduce={m['t_allreduce_model_s'] * 1e3:.3f}ms "
+                  f"-> {verdict}")
     print(f"[train] done at step {tr.step}")
 
 

@@ -184,7 +184,12 @@ class Trainer:
 
     def _comm_entry(self) -> dict:
         """§6 comm-cost model prediction next to the fabric transport's
-        measured per-verb counters (cumulative — see docs/fabric.md)."""
+        measured per-verb counters (cumulative — see docs/fabric.md).
+        ``profiles`` prices the same step on every point of the paper's
+        1GbE -> EDR axis (docs/netsim.md): the allreduce-vs-PS verdict is
+        a function of the wire, so the log carries the whole axis."""
+        from repro.fabric import netsim
+
         comp, raw = self.ps.wire_bytes_per_push()
         workers = max(jax.device_count(), 2)   # modeled fleet size: the
         # same W prices both schemes, so the comparison is apples-to-apples
@@ -193,10 +198,20 @@ class Trainer:
             workers=workers, compress_ratio=comp / raw)
         baseline = costmodel.t_allreduce(raw, workers)
         measured = {k: dict(v) for k, v in self.ps.fabric_stats().items()}
+        per_profile = {
+            name: {
+                "t_ps_step_model_s": costmodel.t_ps_step(
+                    raw, self.ps.num_shards, prof,
+                    staleness=self.ps.staleness, workers=workers,
+                    compress_ratio=comp / raw),
+                "t_allreduce_model_s": costmodel.t_allreduce(
+                    raw, workers, prof),
+                "measured_wire_model_s": prof.modeled_time(measured),
+            } for name, prof in netsim.PROFILES.items()}
         return {"step": self.step, "t_ps_step_model_s": predicted,
                 "t_allreduce_model_s": baseline,
                 "push_wire_bytes": comp, "grad_bytes_f32": raw,
-                "fabric": measured}
+                "fabric": measured, "profiles": per_profile}
 
     def _watchdog(self, dt: float):
         self.step_times.append(dt)

@@ -6,10 +6,13 @@ Checks every ``[text](target)`` in the given files/directories:
   * relative file targets must exist (resolved against the file's dir);
   * ``#anchor`` fragments must match a heading in the target file
     (GitHub slug rules: lowercase, spaces -> '-', punctuation dropped);
-  * http(s)/mailto targets are skipped (no network in CI).
+  * http(s)/mailto targets are skipped (no network in CI);
+  * with ``--root FILE``, every checked .md file must be *reachable* from
+    FILE by following relative markdown links (BFS) — a docs page nobody
+    links from the README is a broken doc even if its own links are fine.
 
-Usage: python tools/check_links.py README.md docs [more files/dirs...]
-Exits 1 listing every broken link.
+Usage: python tools/check_links.py [--root README.md] README.md docs [...]
+Exits 1 listing every broken link / unreachable page.
 """
 from __future__ import annotations
 
@@ -36,16 +39,23 @@ def anchors_of(md_path: Path) -> set:
     return {github_slug(h) for h in HEADING_RE.findall(text)}
 
 
-def check_file(md_path: Path) -> list:
-    errors = []
-    text = md_path.read_text(encoding="utf-8")
-    text = CODE_FENCE_RE.sub("", text)
+def iter_links(md_path: Path):
+    """Yield (target, anchor, dest) for every non-external link in the
+    file (code fences stripped); dest resolves relative targets against
+    the file's dir, the file itself for pure-``#anchor`` links."""
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
     for target in LINK_RE.findall(text):
         if target.startswith(("http://", "https://", "mailto:")):
             continue
         path_part, _, anchor = target.partition("#")
         dest = (md_path.parent / path_part).resolve() if path_part \
             else md_path
+        yield target, anchor, dest
+
+
+def check_file(md_path: Path) -> list:
+    errors = []
+    for target, anchor, dest in iter_links(md_path):
         if not dest.exists():
             errors.append(f"{md_path}: broken link -> {target}")
             continue
@@ -55,7 +65,38 @@ def check_file(md_path: Path) -> list:
     return errors
 
 
+def md_links_of(md_path: Path) -> list:
+    """Resolved .md files this file links to (relative targets only)."""
+    return [dest for _, _, dest in iter_links(md_path)
+            if dest != md_path and dest.exists() and dest.suffix == ".md"]
+
+
+def reachable_from(root: Path) -> set:
+    """BFS over relative markdown links starting at root."""
+    seen = {root.resolve()}
+    frontier = [root.resolve()]
+    while frontier:
+        here = frontier.pop()
+        for dest in md_links_of(here):
+            if dest not in seen:
+                seen.add(dest)
+                frontier.append(dest)
+    return seen
+
+
 def main(argv) -> int:
+    argv = list(argv)
+    root = None
+    if "--root" in argv:
+        i = argv.index("--root")
+        if i + 1 >= len(argv):
+            print("--root needs a file argument", file=sys.stderr)
+            return 1
+        root = Path(argv[i + 1])
+        del argv[i:i + 2]
+        if not root.exists():
+            print(f"--root {root}: no such file", file=sys.stderr)
+            return 1
     files = []
     for arg in argv or ["README.md", "docs"]:
         p = Path(arg)
@@ -63,6 +104,11 @@ def main(argv) -> int:
     errors = []
     for f in files:
         errors.extend(check_file(f))
+    if root is not None:
+        ok = reachable_from(root)
+        errors.extend(
+            f"{f}: not reachable from {root} (add a link somewhere on a "
+            f"path from it)" for f in files if f.resolve() not in ok)
     for e in errors:
         print(e, file=sys.stderr)
     print(f"checked {len(files)} files: "

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import timing
 from repro import fabric
 from repro.fabric import netsim
 
@@ -30,13 +31,24 @@ def _timeit(f, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
-def run(profiles=None):
+def run(profiles=None, timed=False):
     profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
+    measured = {}
+
+    def measure(name, f, *args):
+        """One measured row; with --time, the shared warmup+median-of-k
+        harness also records measured_s."""
+        if timed:
+            s = timing.device_time_s(f, *args)
+            measured[name] = s
+            return s * 1e6
+        return _timeit(f, *args)
+
     # measured: local memory copy bandwidth (c_mem calibration)
     for mb in (1, 16, 64):
         x = jnp.ones((mb * 1024 * 1024 // 4,), jnp.float32)
-        us = _timeit(lambda a: a + 1.0, x)
+        us = measure(f"fig2/mem_copy_{mb}MB", lambda a: a + 1.0, x)
         bw = mb / (us / 1e6) / 1024  # GB/s
         rows.append((f"fig2/mem_copy_{mb}MB", us, f"{bw:.1f}GB/s"))
     # measured: one-sided op dispatch overhead (read/write/cas on NAM region)
@@ -44,14 +56,26 @@ def run(profiles=None):
     words = jnp.zeros((1 << 16,), jnp.uint32)
     idx = jnp.arange(256, dtype=jnp.int32)
     rows.append(("fig2/fabric_read_256rows",
-                 _timeit(jax.jit(fabric.read), region, idx), ""))
+                 measure("fig2/fabric_read_256rows",
+                         jax.jit(fabric.read), region, idx), ""))
     rows.append(("fig2/fabric_cas_256reqs",
-                 _timeit(jax.jit(fabric.cas), words, idx,
+                 measure("fig2/fabric_cas_256reqs",
+                         jax.jit(fabric.cas), words, idx,
                          jnp.zeros(256, jnp.uint32),
                          jnp.ones(256, jnp.uint32)), ""))
     rows.append(("fig2/fabric_fetch_add_256reqs",
-                 _timeit(jax.jit(fabric.fetch_add), words, idx,
+                 measure("fig2/fabric_fetch_add_256reqs",
+                         jax.jit(fabric.fetch_add), words, idx,
                          jnp.ones(256, jnp.uint32)), ""))
+    # measured: the packed router itself — one 64K-request 2-field route
+    # (the motion every protocol stands on; sort-free + single wire buffer)
+    tp = fabric.LocalTransport()
+    ks = jnp.arange(1 << 16, dtype=jnp.uint32)
+    route_f = jax.jit(lambda k: tp.route(
+        {"k": k, "v": k}, (k % jnp.uint32(1)).astype(jnp.int32),
+        cap=1 << 16).fields["k"])
+    rows.append(("fig2/fabric_route_64Kreqs",
+                 measure("fig2/fabric_route_64Kreqs", route_f, ks), ""))
     # modeled: the paper's latency/bandwidth curves per message size, one
     # per profile preset (setup + binding per-message stage + wire)
     for size in (8, 256, 2048, 32768, 1 << 20):
@@ -68,5 +92,8 @@ def run(profiles=None):
                      f"{int(p.cycles_per_msg)}cycles"))
         rows.append((f"fig4/model_msg_rate_{name}",
                      p.msg_rate / 1e6, "Mmsgs/s"))
-    return rows, {"profiles": {n: vars(netsim.get_profile(n))
-                               for n in profiles}}
+    extras = {"profiles": {n: vars(netsim.get_profile(n))
+                           for n in profiles}}
+    if timed:
+        extras["measured_s"] = measured
+    return rows, extras

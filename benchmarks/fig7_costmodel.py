@@ -8,6 +8,7 @@ on RDMA the one-sided variants (RDMA GHJ / RRJ) beat both.  Sweeping the
 ``crossover`` rows record the per-profile argmin so the flip is explicit
 in the CSV/JSON trajectory.
 """
+from benchmarks import timing
 from repro.core import costmodel
 from repro.db import Planner
 from repro.fabric import netsim
@@ -15,7 +16,7 @@ from repro.fabric import netsim
 DEFAULT_PROFILES = tuple(netsim.PROFILES)       # fig7 IS the axis figure
 
 
-def run(profiles=None):
+def run(profiles=None, timed=False):
     profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
     nr = ns = 1_000_000 * 8          # |R|=|S|=1M x 8B tuples
@@ -50,6 +51,14 @@ def run(profiles=None):
         assert any(len(set(w.values())) > 1 for w in crossover.values()), \
             f"no planner crossover across {profiles}"
     rows.append(("fig7/claims", 0.0, "all_hold"))
-    return rows, {"crossover": {str(s): w for s, w in crossover.items()},
-                  "profiles": {n: vars(netsim.get_profile(n))
-                               for n in profiles}}
+    extras = {"crossover": {str(s): w for s, w in crossover.items()},
+              "profiles": {n: vars(netsim.get_profile(n))
+                           for n in profiles}}
+    if timed:
+        # fig7 is analytic; what IS on this figure's hot path is the
+        # planner evaluation itself (every db.explain/execute pays it)
+        extras["measured_s"] = {
+            "fig7/planner_join_alternatives": timing.device_time_s(
+                lambda: Planner(net=profiles[0]).join_alternatives(
+                    nr, ns, 0.5))}
+    return rows, extras

@@ -17,10 +17,32 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks import timing
 from repro.db import JOIN_VARIANTS, Database
 from repro.fabric import MeshTransport, netsim
 
 DEFAULT_PROFILES = ("rdma_fdr4x",)       # the paper's measured cluster
+
+
+def _shuffle_route_bench(transport, n_rows: int = 1 << 20):
+    """The shuffle microbench: ONE routed exchange of a (keys, vals)
+    relation — the exact motion `_route_by_key` performs inside every
+    distributed join, isolated from the local join work.  This is the
+    packed-wire + sort-free hot path the PR's speedup acceptance pins."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.randint(key, (n_rows,), 0, 1 << 30).astype(jnp.uint32)
+    vs = jnp.ones((n_rows,), jnp.uint32)
+    n = transport.n
+    cap = 2 * n_rows // n
+
+    def body(k, v):
+        dest = (k % jnp.uint32(n)).astype(jnp.int32)
+        res = transport.route({"k": k, "v": v}, dest, cap=cap)
+        return res.fields["k"], res.fields["v"], res.dropped
+
+    f = jax.jit(lambda k, v: transport.run(
+        body, (k, v), out_reps=(False, False, True)))
+    return timing.device_time_s(f, ks, vs)
 
 
 def _rel(sel: float, n: int = 1 << 20):
@@ -35,9 +57,10 @@ def _rel(sel: float, n: int = 1 << 20):
     return rk, rv, sk, jnp.ones((n,), jnp.uint32)
 
 
-def run(profiles=None):
+def run(profiles=None, timed=False):
     profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
+    measured = {}
     n = 1 << 20
     mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
     db = Database(transport=MeshTransport(mesh, "data",
@@ -64,11 +87,18 @@ def run(profiles=None):
                          "|".join(f"{p}:{w}" for p, w in winners.items())))
         base = None
         for name in JOIN_VARIANTS:              # forced grid for the figure
-            r = db.execute(q, force_variant=name)   # warm/compile
-            t0 = time.perf_counter()
-            for _ in range(3):
-                r = db.execute(q, force_variant=name)
-            us = (time.perf_counter() - t0) / 3 * 1e6
+            if timed:
+                s = timing.device_time_s(
+                    lambda v=name: db.execute(q, force_variant=v).value,
+                    warmup=1, k=3)
+                measured[f"fig8a/sel{sel}_{name}"] = s
+                us = s * 1e6
+            else:
+                r = db.execute(q, force_variant=name)   # warm/compile
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    r = db.execute(q, force_variant=name)
+                us = (time.perf_counter() - t0) / 3 * 1e6
             if name == "ghj":
                 base = us
             rows.append((f"fig8a/sel{sel}_{name}", us,
@@ -77,11 +107,22 @@ def run(profiles=None):
         # acceptance: the join-variant argmin must differ on >= 2 profiles
         assert any(len(set(w.values())) > 1 for w in crossover.values()), \
             f"no join-variant crossover across {profiles}"
+    # the shuffle microbench: the routed exchange alone (PR acceptance:
+    # packed + sort-free route >= 1.3x over the per-leaf argsort router);
+    # a FRESH transport, so the figure's modeled_wire/fabric counters keep
+    # pricing only the join queries' traffic
+    route_s = _shuffle_route_bench(MeshTransport(mesh, "data"))
+    rows.append(("fig8a/shuffle_route_1M", route_s * 1e6,
+                 "one_packed_route_2fields"))
+    measured["fig8a/shuffle_route_1M"] = route_s
     stats = db.fabric_stats()
     modeled = {p: netsim.get_profile(p).modeled_time(stats)
                for p in profiles}
     for pname, s in modeled.items():
         rows.append((f"fig8a/modeled_wire_{pname}", s * 1e6,
                      "all_counted_traffic"))
-    return rows, {"fabric": stats, "modeled_wire_s": modeled,
-                  "crossover": {str(s): w for s, w in crossover.items()}}
+    extras = {"fabric": stats, "modeled_wire_s": modeled,
+              "crossover": {str(s): w for s, w in crossover.items()}}
+    if timed:
+        extras["measured_s"] = measured
+    return rows, extras

@@ -18,6 +18,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks import timing
 from repro.db import AGG_VARIANTS, Database
 from repro.fabric import MeshTransport, netsim
 from repro.kernels import ops
@@ -25,9 +26,10 @@ from repro.kernels import ops
 DEFAULT_PROFILES = ("rdma_fdr4x",)
 
 
-def run(profiles=None):
+def run(profiles=None, timed=False):
     profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
+    measured = {}
     n = 1 << 20
     mesh = jax.make_mesh((jax.device_count(),)[:1], ("data",))
     db = Database(transport=MeshTransport(mesh, "data",
@@ -52,11 +54,18 @@ def run(profiles=None):
             rows.append((f"fig8b/groups{groups}_crossover", 0.0,
                          "|".join(f"{p}:{w}" for p, w in winners.items())))
         for name in AGG_VARIANTS:               # forced grid for the figure
-            r = db.execute(q, force_variant=name)   # warm/compile
-            t0 = time.perf_counter()
-            for _ in range(3):
-                r = db.execute(q, force_variant=name)
-            us = (time.perf_counter() - t0) / 3 * 1e6
+            if timed:
+                s = timing.device_time_s(
+                    lambda v=name: db.execute(q, force_variant=v).value,
+                    warmup=1, k=3)
+                measured[f"fig8b/groups{groups}_{name}"] = s
+                us = s * 1e6
+            else:
+                r = db.execute(q, force_variant=name)   # warm/compile
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    r = db.execute(q, force_variant=name)
+                us = (time.perf_counter() - t0) / 3 * 1e6
             rows.append((f"fig8b/groups{groups}_{name}", us, ""))
     if len(profiles) > 1:
         # the agg-scheme argmin must differ somewhere along the axis
@@ -71,8 +80,14 @@ def run(profiles=None):
     jax.block_until_ready(r)
     rows.append(("fig8b/kernel_grouped_agg_1M_2048slots",
                  (time.perf_counter() - t0) * 1e6, "interpret_mode"))
+    if timed:
+        measured["fig8b/kernel_grouped_agg_1M_2048slots"] = \
+            timing.device_time_s(lambda: ops.grouped_agg(slot, fv, 2048))
     stats = db.fabric_stats()
     modeled = {p: netsim.get_profile(p).modeled_time(stats)
                for p in profiles}
-    return rows, {"fabric": stats, "modeled_wire_s": modeled,
-                  "crossover": {str(g): w for g, w in crossover.items()}}
+    extras = {"fabric": stats, "modeled_wire_s": modeled,
+              "crossover": {str(g): w for g, w in crossover.items()}}
+    if timed:
+        extras["measured_s"] = measured
+    return rows, extras

@@ -173,7 +173,7 @@ def _run_one_profile(pname, compute_s, rows, prefix):
                                for k, w in ps_walls.items()}}}
 
 
-def run(profiles=None):
+def run(profiles=None, timed=False):
     profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
     rows = []
     compute_s = [BASE_COMPUTE_S] * WORKERS
@@ -190,4 +190,15 @@ def run(profiles=None):
         extras["profile"] = profiles[0]
     else:
         extras["profiles"] = per_profile
+    if timed:
+        # the figure's wall-clocks are event-loop simulations (virtual
+        # compute clock); the DEVICE work per step is the PS round trip —
+        # bounded-stale pull + compressed routed push — measured here
+        from benchmarks import timing
+        ps = ParameterServer(_params(), transport=LocalTransport(),
+                             staleness=8, block=256)
+        grad = _grad(0)
+        extras["measured_s"] = {
+            "fig9/ps_pull_push_round": timing.device_time_s(
+                lambda: (ps.pull(worker=0), ps.push(grad, worker=0)))}
     return rows, extras

@@ -9,6 +9,12 @@ machine-readable ``BENCH_<figure>.json`` per figure (rows plus the fabric
 transport's per-verb message/byte counters when the figure measures them)
 so the perf trajectory is comparable across PRs.
 
+``--time`` runs each figure's measured hot path through the shared
+warmup + median-of-k harness (``benchmarks/timing.py``) and adds a
+``measured_s`` dict ({row name: seconds}) to every figure's JSON, next to
+the modeled numbers — the repo's falsifiable wall-clock baseline.  The
+harness errors if a figure forgets to emit it.
+
 ``--profile`` selects the network profile(s) the modeled/planned parts run
 under (``repro.fabric.netsim`` presets; ``all`` sweeps the paper's whole
 1GbE -> IPoIB -> FDR -> EDR axis).  Measured figures run their device work
@@ -42,14 +48,18 @@ MODULES = {
 }
 
 
-def _run_module(mod, profiles):
+def _run_module(mod, profiles, timed):
     """Normalize run() output: rows, or (rows, extras dict)."""
-    res = mod.run(profiles=profiles)
+    res = mod.run(profiles=profiles, timed=timed)
     if isinstance(res, tuple):
         rows, extras = res
     else:
         rows, extras = res, {}
-    return list(rows), dict(extras)
+    rows, extras = list(rows), dict(extras)
+    if timed and not extras.get("measured_s"):
+        raise RuntimeError(f"{mod.__name__} emitted no measured_s under "
+                           "--time")
+    return rows, extras
 
 
 def main() -> None:
@@ -65,6 +75,9 @@ def main() -> None:
                          "the whole axis (default: each figure's own)")
     ap.add_argument("--json", default=None, metavar="DIR",
                     help="write BENCH_<figure>.json result files here")
+    ap.add_argument("--time", action="store_true",
+                    help="measure device wall-clock (warmup + median-of-k)"
+                         " and emit measured_s per figure")
     args = ap.parse_args()
     if args.profile is None:
         profiles = None                       # each module's default
@@ -79,17 +92,20 @@ def main() -> None:
     failed = []
     for name in names:
         try:
-            rows, extras = _run_module(MODULES[name], profiles)
+            rows, extras = _run_module(MODULES[name], profiles, args.time)
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
             continue
         for row, us, derived in rows:
             print(f"{row},{us:.2f},{derived}")
+        for row, s in sorted(extras.get("measured_s", {}).items()):
+            print(f"{row}/measured,{s * 1e6:.2f},median_wallclock")
         if args.json:
             payload = {
                 "figure": name,
                 "profile": (args.profile or "default"),
+                "timed": args.time,
                 "rows": [{"name": row, "us_per_call": us,
                           "derived": derived}
                          for row, us, derived in rows],

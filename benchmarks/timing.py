@@ -1,0 +1,36 @@
+"""Shared measured-time harness: warmup + median-of-k device wall-clock.
+
+Every figure that reports a measured number routes it through
+:func:`device_time_s` so ``benchmarks/run.py --time`` can emit a uniform
+``measured_s`` entry (seconds, median of k post-warmup repetitions, device
+work synchronized with ``block_until_ready``) next to the modeled numbers
+in each ``BENCH_<figure>.json`` — the repo's falsifiable perf baseline
+(docs/benchmarks.md#measured-time).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable
+
+import jax
+
+#: --time defaults: enough warmup to exclude compile + first-touch, odd k
+#: so the median is an actual sample.
+WARMUP = 2
+REPEATS = 5
+
+
+def device_time_s(f: Callable, *args, warmup: int = WARMUP,
+                  k: int = REPEATS) -> float:
+    """Median wall-clock seconds of ``f(*args)`` over ``k`` runs after
+    ``warmup`` runs (compile + cache effects excluded); every run is
+    synchronized on the device result."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(f(*args))
+    samples = []
+    for _ in range(max(k, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        samples.append(time.perf_counter() - t0)
+    return float(statistics.median(samples))

@@ -8,8 +8,10 @@ RDMA-AGG (paper): cache-sized local pre-aggregation tables; overflow is
 *flushed in the background* to hash-partitioned owner shards — here each
 chunk's pre-aggregated partition tables are requests routed through
 ``fabric.route()`` (dest = owner shard, chunked exchange = the background
-flush) — then parallel per-owner post-aggregation.  More partitions than
-workers => robust to skew and high distinct counts.
+flush; the router packs the tables into its single wire buffer and, on
+TPU, bins them with the Pallas ``kernels/radix_partition`` kernel) — then
+parallel per-owner post-aggregation.  More partitions than workers =>
+robust to skew and high distinct counts.
 
 Both builders take a fabric transport (``LocalTransport`` for one-shard
 ground truth, ``MeshTransport(mesh, axis)`` for the real collectives).

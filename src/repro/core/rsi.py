@@ -125,7 +125,12 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
         # payloads stay client-side until the install round trip
         req = {"rec": recs_flat, "exp": exp_flat, "prio": gid,
                "slot": jnp.arange(Tl * W, dtype=jnp.int32)}
-        res = transport.route(req, flat_dest, cap=cap, chunks=chunks)
+        # both rounds travel to the same home shards, so the slot
+        # assignment is binned ONCE and reused for the install (the act
+        # filter is a mask over the same plan — slots stay put, which is
+        # also what keeps the response path stable)
+        plan = transport.plan_route(flat_dest, cap=cap)
+        res = transport.route(req, plan=plan, chunks=chunks)
         r, rvalid = res.fields, res.valid
         # ---- local CAS arbitration on my records (global prio = fair)
         lrec = jnp.where(rvalid > 0, r["rec"] % r_local, -1)  # local row
@@ -148,8 +153,7 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
                 "npay": npay_flat,
                 "do_pay": commit_req.astype(jnp.int32)}
         act = commit_req | release_req
-        res2 = transport.route(inst, jnp.where(act, flat_dest, n),
-                               cap=cap, chunks=chunks)
+        res2 = transport.route(inst, plan=plan, mask=act, chunks=chunks)
         r2, v2 = res2.fields, res2.valid
         lrec2 = jnp.where(v2 > 0, r2["rec"] % r_local, -1)
         words = transport.write(words, lrec2, r2["val"])

@@ -7,8 +7,13 @@ radix-into-fixed-buffers + paired all_to_all router RSI commits through —
 driven by a pluggable transport: ``MeshTransport`` makes it a real
 ``all_to_all`` inside shard_map, ``LocalTransport`` is the one-shard ground
 truth.  The RDMA variants set ``chunks > 1`` so XLA can overlap transfer
-with partitioning compute (selective signaling).  The radix binning step is
-the jnp twin of ``repro.kernels.radix_partition``.
+with partitioning compute (selective signaling).  The shuffle's
+scatter-into-buffers step is the router's: packed single wire buffer,
+sort-free rank-in-bucket binning, and on TPU the Pallas
+``repro.kernels.radix_partition`` software-managed-buffer kernel
+(jnp scatter elsewhere — see docs/fabric.md).  The *local* radix passes
+below keep their argsort form: they never touch the wire and the jaxpr
+sort-free guarantee is scoped to the route/cas/fetch_add hot paths.
 
 Relations are (keys, values) u32/u32; R is the (unique-key) build side.
 """

@@ -161,8 +161,9 @@ class Database:
     def commit(self, sessions: List[Session], *, chunks: int = 1,
                priority=None) -> np.ndarray:
         """Commit a wave of concurrent sessions as ONE batched fabric
-        commit (one routed prepare + one routed install round trip).
-        Returns the per-session committed mask."""
+        commit (one routed prepare + one routed install round trip; both
+        rounds reuse a single RoutePlan — the wave is binned to home
+        shards once).  Returns the per-session committed mask."""
         if not sessions:
             return np.zeros((0,), bool)
         isolation = sessions[0].isolation

@@ -6,7 +6,11 @@ against a table's version store, ``put`` buffers writes, and ``commit()``
 hands the transaction to the database, which batches every session
 committing in the same wave into ONE fabric commit (the paper's compute
 node drives many concurrent client transactions through one routed
-prepare/install round trip).
+prepare/install round trip).  A wave's two routed rounds share one
+:class:`~repro.fabric.RoutePlan` — the prepare round bins the wave's
+write set into per-home-shard buffers once and the install round reuses
+the slots (``rsi.commit`` builds the plan, ``transport.plan_builds``
+counts it) — so each wave pays the rank-in-bucket pass once, not twice.
 
 The isolation backend is selectable per session behind the same API:
 ``"rsi"`` (default) is the paper's RDMA snapshot-isolation protocol;

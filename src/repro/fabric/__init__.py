@@ -4,8 +4,12 @@ One RDMA-style substrate for every distributed protocol in the repo:
 
   verbs      read / write / cas / fetch_add over named regions
              (``NamPool`` allocates regions and binds shardings)
-  route()    the single radix-into-fixed-buffers request router with a
-             paired all_to_all and a ``chunks=`` pipelining knob
+  route()    the single radix-into-fixed-buffers request router: all
+             fields + the valid mask packed into ONE contiguous u32 wire
+             buffer (one all_to_all per direction regardless of field
+             count), sort-free rank-in-bucket binning, a ``chunks=``
+             pipelining knob, and ``RoutePlan``/``plan_route`` for slot
+             reuse across rounds (RSI prepare+install)
   transports ``LocalTransport`` (one shard, no collectives) and
              ``MeshTransport(mesh, axis)`` (shard_map + all_to_all), both
              counting messages and bytes per verb
@@ -19,14 +23,19 @@ and nothing else — the paper's "redesign the system around the verbs".
 """
 from repro.fabric.netsim import (ALIASES, PROFILES, NetworkProfile,
                                  from_counters, get_profile)
-from repro.fabric.router import RouteResult, chunked_all_to_all, route
+from repro.fabric.router import (RoutePlan, RouteResult, bucket_ranks,
+                                 chunked_all_to_all, pack_fields,
+                                 packed_row_words, plan_route, route,
+                                 unpack_fields)
 from repro.fabric.transport import LocalTransport, MeshTransport, Transport
 from repro.fabric.verbs import (NamPool, Region, cas, fetch_add, read,
                                 write)
 
 __all__ = [
     "NamPool", "Region", "read", "write", "cas", "fetch_add",
-    "route", "RouteResult", "chunked_all_to_all",
+    "route", "RouteResult", "RoutePlan", "plan_route", "bucket_ranks",
+    "pack_fields", "unpack_fields", "packed_row_words",
+    "chunked_all_to_all",
     "Transport", "LocalTransport", "MeshTransport",
     "NetworkProfile", "PROFILES", "ALIASES", "get_profile",
     "from_counters",

@@ -18,14 +18,51 @@ motion, written once:
 
 The exchange itself is injected by the transport (``None`` = stay local), so
 the same router serves a single shard and a shard_mapped mesh unchanged.
+
+Two hot-path properties realize the paper's per-message argument (§3.3):
+
+**Packed wire format.**  All field leaves plus the occupancy mask travel in
+ONE contiguous ``(n*cap, row_words)`` uint32 buffer: each leaf's row is
+bitcast into 32-bit word lanes (sub-word dtypes padded up to a whole lane),
+the last lane is the valid mask, and the receiver bitcasts the lanes back.
+One ``route()`` is therefore exactly one ``all_to_all`` regardless of field
+count — the doorbell-batching move: message count is per *routed batch*,
+not per pytree leaf.  ``chunked_all_to_all`` pipelines the packed buffer.
+
+**Sort-free binning.**  Slot assignment is a one-pass rank-in-bucket
+scatter (:func:`bucket_ranks`: cumulative one-hot counts, O(A·n) fully
+parallel work) instead of the former ``argsort`` + ``searchsorted`` — no
+``sort`` primitive anywhere in a routed trace (guarded by tests).  Per-shard
+A shrinks as n grows under a sharded mesh, so A·n stays ~the global batch.
+
+On TPU the scatter-into-buffers step can instead run the Pallas
+``repro.kernels.radix_partition`` kernel (software-managed buffers in VMEM;
+``backend="pallas"``, the default when the backend is TPU); the jnp scatter
+is the fallback everywhere else and the reference semantics.
+
+A :class:`RoutePlan` (:func:`plan_route`) precomputes the slot assignment
+for a given ``dest`` so protocols with identical routing across rounds —
+RSI's prepare and install travel to the same home shards — bin once and
+reuse; ``mask=`` filters requests out of a reused plan without re-ranking
+(their slots stay reserved, which is exactly what keeps response slots
+stable across the rounds).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+WORD = jnp.uint32
+WORD_BYTES = 4
+
+#: scatter backends: "jnp" = pure-jnp reference scatter, "pallas" = the
+#: kernels/radix_partition software-managed-buffer kernel (TPU); None = auto
+#: (pallas iff the default backend is TPU).
+ROUTE_BACKENDS = ("jnp", "pallas")
 
 
 @dataclass
@@ -34,7 +71,7 @@ class RouteResult:
 
     fields:  pytree of (n*cap, ...) buffers *after* the exchange (receiver
              view: slots [p*cap:(p+1)*cap] came from peer p).
-    valid:   (n*cap,) int32 occupancy mask, exchanged alongside the fields.
+    valid:   (n*cap,) int32 occupancy mask (the packed buffer's valid lane).
     dropped: () int32 — local requests lost to capacity overflow (pre-
              exchange; filtered dest >= n requests are not counted).
     sent:        pytree of (n*cap, ...) buffers as *sent* (pre-exchange) —
@@ -49,37 +86,214 @@ class RouteResult:
     sent_valid: jnp.ndarray
 
 
-def route(fields, dest, *, n: int, cap: int, chunks: int = 1,
-          exchange: Optional[Callable] = None) -> RouteResult:
+# ---------------------------------------------------- packed wire format --
+
+def _leaf_row_words(shape, dtype) -> int:
+    """Words per request row of one leaf (row bytes padded to whole 32-bit
+    lanes)."""
+    row_bytes = math.prod(shape[1:]) * jnp.dtype(dtype).itemsize
+    return -(-row_bytes // WORD_BYTES)
+
+
+def packed_row_words(fields) -> int:
+    """Static wire width of one packed request row, in uint32 lanes: every
+    leaf's word lanes plus the trailing valid lane.  This is what one slot
+    of the ``(n*cap, row_words)`` wire buffer costs, and what the transport
+    bills ``route`` bytes from."""
+    leaves = jax.tree_util.tree_leaves(fields)
+    return sum(_leaf_row_words(l.shape, l.dtype) for l in leaves) + 1
+
+
+def _pack_leaf(x) -> jnp.ndarray:
+    """(A, ...) any dtype -> (A, w) uint32 word lanes (bit-exact)."""
+    A = x.shape[0]
+    flat = x.reshape(A, math.prod(x.shape[1:]))
+    if flat.dtype == jnp.bool_:
+        flat = flat.astype(jnp.uint8)
+    if flat.dtype.itemsize < WORD_BYTES:          # sub-word: group lanes
+        per = WORD_BYTES // flat.dtype.itemsize
+        pad = (-flat.shape[1]) % per
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        flat = flat.reshape(A, flat.shape[1] // per, per)
+    w = _leaf_row_words(x.shape, x.dtype)
+    return jax.lax.bitcast_convert_type(flat, WORD).reshape(A, w)
+
+
+def _unpack_leaf(words, shape, dtype) -> jnp.ndarray:
+    """(B, w) uint32 -> (B,) + shape[1:] of dtype (inverse of _pack_leaf)."""
+    B = words.shape[0]
+    dt = jnp.dtype(dtype)
+    carrier = jnp.dtype("uint8") if dt == jnp.bool_ else dt
+    if carrier.itemsize > WORD_BYTES:             # wide: collapse word pairs
+        per = carrier.itemsize // WORD_BYTES
+        words = words.reshape(B, words.shape[1] // per, per)
+    flat = jax.lax.bitcast_convert_type(words, carrier)
+    flat = flat.reshape(B, math.prod(flat.shape[1:]))
+    flat = flat[:, :math.prod(shape[1:])]
+    if dt == jnp.bool_:
+        flat = flat.astype(jnp.bool_)
+    return flat.reshape((B,) + tuple(shape[1:]))
+
+
+def pack_fields(fields):
+    """Pack a request pytree into one (A, row_words) uint32 buffer whose
+    last lane is the valid mask (all ones pre-scatter: empty buffer slots
+    keep the zero lane, so occupancy travels inside the rows for free).
+    Returns (packed, treedef, leaf_specs)."""
+    leaves, treedef = jax.tree_util.tree_flatten(fields)
+    specs = [(l.shape, l.dtype) for l in leaves]
+    A = leaves[0].shape[0] if leaves else 0
+    cols = [_pack_leaf(l) for l in leaves]
+    cols.append(jnp.ones((A, 1), WORD))
+    return jnp.concatenate(cols, axis=1), treedef, specs
+
+
+def unpack_fields(buf, treedef, specs):
+    """Split a (B, row_words) wire buffer back into (fields pytree, valid).
+    Empty slots unpack to zeros in every dtype (the all-zero bit pattern)."""
+    out, col = [], 0
+    for shape, dtype in specs:
+        w = _leaf_row_words(shape, dtype)
+        out.append(_unpack_leaf(buf[:, col:col + w], shape, dtype))
+        col += w
+    valid = buf[:, col].astype(jnp.int32)
+    return jax.tree_util.tree_unflatten(treedef, out), valid
+
+
+# -------------------------------------------------- sort-free bin ranks --
+
+def bucket_ranks(dest, n: int) -> jnp.ndarray:
+    """Stable arrival-order rank of each request within its destination
+    bucket, sort-free: cumulative one-hot counts — O(A·n) fully parallel
+    work instead of an O(A log A) sort (sorts are the TPU's weakest
+    primitive; the one-hot cumsum is pure vector work).  Out-of-range dest
+    (filtered) matches no bucket and consumes no rank; its returned rank is
+    meaningless and must be masked by the caller."""
+    dest = dest.astype(jnp.int32)
+    onehot = dest[:, None] == jnp.arange(n, dtype=jnp.int32)[None, :]
+    ranks = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    safe = jnp.clip(dest, 0, n - 1)
+    return jnp.take_along_axis(ranks, safe[:, None], axis=1)[:, 0]
+
+
+@dataclass
+class RoutePlan:
+    """Precomputed slot assignment for one ``dest`` vector: everything
+    :func:`route` needs except the payload.  Build once with
+    :func:`plan_route`, reuse for every round that routes to the same
+    destinations (RSI prepare+install); ``route(..., plan=p, mask=m)``
+    drops masked requests from the wire without re-ranking, keeping slot
+    positions identical across the rounds.
+
+    slot:     (A,) int32 — wire slot (dest*cap + rank) for kept requests,
+              n*cap (one past the buffer) otherwise, so a ``mode="drop"``
+              scatter discards them.
+    keep:     (A,) bool — deliverable and within capacity.
+    overflow: (A,) bool — deliverable but beyond capacity (the drop set).
+    """
+    n: int
+    cap: int
+    slot: jnp.ndarray
+    keep: jnp.ndarray
+    overflow: jnp.ndarray
+
+    @property
+    def dropped(self) -> jnp.ndarray:
+        return jnp.sum(self.overflow.astype(jnp.int32))
+
+
+jax.tree_util.register_dataclass(
+    RoutePlan, data_fields=["slot", "keep", "overflow"],
+    meta_fields=["n", "cap"])
+
+
+def plan_route(dest, *, n: int, cap: int) -> RoutePlan:
+    """One-pass rank-in-bucket slot assignment for ``dest`` (sort-free)."""
+    dest = dest.astype(jnp.int32)
+    deliverable = (dest >= 0) & (dest < n)
+    rank = bucket_ranks(dest, n)
+    keep = deliverable & (rank < cap)
+    overflow = deliverable & (rank >= cap)
+    slot = jnp.where(keep, dest * cap + rank, n * cap)
+    return RoutePlan(n=n, cap=cap, slot=slot, keep=keep, overflow=overflow)
+
+
+# ------------------------------------------------------------- scatter ---
+
+def _scatter_rows(rows, plan: RoutePlan, mask):
+    """Reference scatter of packed rows into the (n*cap, w) wire buffer."""
+    slot = plan.slot if mask is None else jnp.where(
+        mask & plan.keep, plan.slot, plan.n * plan.cap)
+    buf = jnp.zeros((plan.n * plan.cap, rows.shape[1]), WORD)
+    return buf.at[slot].set(rows, mode="drop")
+
+
+def _pallas_scatter_rows(rows, dest, n: int, cap: int):
+    """Scatter via the Pallas software-managed-buffer radix partitioner
+    (TPU): same first-come / capped / filtered semantics as the reference
+    scatter, binning done bucket-parallel in VMEM."""
+    from repro.kernels import ops
+    A, w = rows.shape
+    bn = 256
+    pad = (-A) % bn
+    if pad:
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+        dest = jnp.pad(dest.astype(jnp.int32), (0, pad),
+                       constant_values=-1)
+    out, _ = ops.radix_partition(rows, dest.astype(jnp.int32), n, cap)
+    return out.reshape(n * cap, w)
+
+
+def _resolve_backend(backend: Optional[str]) -> str:
+    if backend is None:
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ROUTE_BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {ROUTE_BACKENDS}")
+    return backend
+
+
+# --------------------------------------------------------------- route ---
+
+def route(fields, dest=None, *, n: Optional[int] = None,
+          cap: Optional[int] = None, chunks: int = 1,
+          exchange: Optional[Callable] = None,
+          plan: Optional[RoutePlan] = None, mask=None,
+          backend: Optional[str] = None) -> RouteResult:
     """Radix-partition `fields` by `dest` into (n, cap) fixed buffers and
-    (optionally) exchange them. See module docstring for semantics."""
+    (optionally) exchange them — as ONE packed wire buffer, one
+    ``all_to_all``, any number of fields.  Pass ``plan=`` (from
+    :func:`plan_route`) to reuse a slot assignment across rounds; ``mask=``
+    (requires a plan) unsends requests without re-ranking.  See the module
+    docstring for semantics."""
+    if plan is not None:
+        n, cap = plan.n, plan.cap
+    elif n is None or cap is None:
+        raise ValueError("route needs n= and cap= (or a plan=)")
+    if mask is not None and plan is None:
+        raise ValueError("mask= only applies to a reused plan=")
     if cap % chunks != 0:
         raise ValueError(f"cap={cap} not divisible by chunks={chunks}")
-    A = dest.shape[0]
-    dest = dest.astype(jnp.int32)
-    order = jnp.argsort(dest, stable=True)
-    ds = dest[order]
-    first = jnp.searchsorted(ds, ds, side="left")
-    pos = jnp.arange(A, dtype=jnp.int32) - first.astype(jnp.int32)
-    # dest outside [0, n) is filtered (negatives would WRAP in the scatter);
-    # only capacity overflow among deliverable requests counts as dropped.
-    deliverable = (ds >= 0) & (ds < n)
-    keep = (pos < cap) & deliverable
-    dropped = jnp.sum(((pos >= cap) & deliverable).astype(jnp.int32))
-    slot = jnp.where(keep, ds * cap + pos, n * cap)
-
-    def scatter(v):
-        buf = jnp.zeros((n * cap + 1,) + v.shape[1:], v.dtype)
-        return buf.at[slot].set(v[order], mode="drop")[:-1]
-
-    sent = jax.tree_util.tree_map(scatter, fields)
-    sent_valid = jnp.zeros((n * cap + 1,), jnp.int32).at[slot].set(
-        keep.astype(jnp.int32), mode="drop")[:-1]
+    rows, treedef, specs = pack_fields(fields)
+    if plan is None and _resolve_backend(backend) == "pallas":
+        dest = dest.astype(jnp.int32)
+        deliverable = (dest >= 0) & (dest < n)
+        counts = jnp.zeros((n,), jnp.int32).at[
+            jnp.where(deliverable, dest, n)].add(1, mode="drop")
+        dropped = jnp.sum(jnp.maximum(counts - cap, 0))
+        buf = _pallas_scatter_rows(rows, dest, n, cap)
+    else:
+        if plan is None:
+            plan = plan_route(dest, n=n, cap=cap)
+            mask = None
+        dropped = (plan.dropped if mask is None else
+                   jnp.sum((plan.overflow & mask).astype(jnp.int32)))
+        buf = _scatter_rows(rows, plan, mask)
+    sent, sent_valid = unpack_fields(buf, treedef, specs)
     if exchange is None:
         return RouteResult(sent, sent_valid, dropped, sent, sent_valid)
-    recv = jax.tree_util.tree_map(exchange, sent)
-    valid = exchange(sent_valid)
-    return RouteResult(recv, valid, dropped, sent, sent_valid)
+    recv_fields, valid = unpack_fields(exchange(buf), treedef, specs)
+    return RouteResult(recv_fields, valid, dropped, sent, sent_valid)
 
 
 def chunked_all_to_all(v, axis: str, n: int, cap: int, chunks: int = 1):

@@ -28,7 +28,11 @@ reservations of the paper's software-managed-buffer design, not occupancy.
 full regardless of fill); verb msgs count every buffer slot handed to the
 verb, which is exact under ``LocalTransport`` (cap = batch size) and an
 upper bound per shard under ``MeshTransport`` (each home shard scans its
-full n*cap receive buffer).
+full n*cap receive buffer).  A ``route`` is ``n * chunks`` messages — the
+fields and the valid mask travel in ONE packed u32 buffer per peer per
+pipelined chunk, independent of field count — and its bytes are the
+packed buffer (word-padded rows, valid lane included).  ``plan_route`` is
+local compute: counted in ``plan_builds``, never in ``stats()``.
 
 A transport may also carry a :class:`~repro.fabric.netsim.NetworkProfile`
 (``profile=`` — a preset name like ``"rdma_edr"`` or a profile instance).
@@ -67,6 +71,7 @@ class Transport:
 
     def __init__(self, profile=None):
         self._stats: dict = {}
+        self.plan_builds: int = 0
         self.profile = (netsim.get_profile(profile)
                         if profile is not None else None)
 
@@ -88,6 +93,7 @@ class Transport:
 
     def reset_stats(self):
         self._stats = {}
+        self.plan_builds = 0
 
     def modeled_time(self, profile=None) -> float:
         """Modeled wall-clock of all counted traffic.  With ``profile``
@@ -121,16 +127,39 @@ class Transport:
 
     # ---------------------------------------------------------- router ---
 
-    def route(self, fields, dest, *, cap: int, chunks: int = 1):
+    def route(self, fields, dest=None, *, cap: Optional[int] = None,
+              chunks: int = 1, plan=None, mask=None):
         """Radix-route a request pytree into (n, cap) buffers and exchange
-        them with the peers (see ``repro.fabric.route``)."""
+        them with the peers (see ``repro.fabric.route``).
+
+        Message accounting matches the packed wire format: the fields and
+        the valid mask travel in ONE contiguous (n*cap, row_words) u32
+        buffer, so a route is ``n * chunks`` messages (one buffer per peer
+        per pipelined chunk) **regardless of field count**, and its bytes
+        are the packed buffer (word-padded rows, valid lane included).
+
+        plan=: reuse a :class:`~repro.fabric.router.RoutePlan` from
+        :meth:`plan_route` (skips the rank-in-bucket pass); mask= unsends
+        requests from a reused plan without re-ranking."""
         n = self.n
-        leaves = jax.tree_util.tree_leaves(fields)
-        nbytes = sum(n * cap * _row_bytes(l) for l in leaves
-                     ) + n * cap * 4  # + the valid mask
-        self._count("route", (len(leaves) + 1) * n * chunks, nbytes)
+        if plan is not None:
+            cap = plan.cap
+        elif cap is None:
+            raise ValueError("route needs cap= (or a plan=)")
+        nbytes = n * cap * _router.WORD_BYTES * _router.packed_row_words(
+            fields)
+        self._count("route", n * chunks, nbytes)
         return _router.route(fields, dest, n=n, cap=cap, chunks=chunks,
-                             exchange=self._make_exchange(cap, chunks))
+                             exchange=self._make_exchange(cap, chunks),
+                             plan=plan, mask=mask)
+
+    def plan_route(self, dest, *, cap: int):
+        """Precompute the slot assignment for ``dest`` (one sort-free
+        rank-in-bucket pass) for reuse across routed rounds.  Local
+        compute, not wire traffic — counted in ``plan_builds``, not in
+        ``stats()``."""
+        self.plan_builds += 1
+        return _router.plan_route(dest, n=self.n, cap=cap)
 
     # ------------------------------------------------ substrate hooks ----
 

@@ -80,6 +80,25 @@ def write(region_arr, idx, values):
         values, mode="drop")
 
 
+def _lex_winner(idx, priority, contenders, R):
+    """Sort-free arbitration shared by the atomic verbs: among `contenders`
+    (bool (A,)), mark the single request per word that is first in
+    lexicographic (priority, arrival) order.  Two O(A) segment-min
+    scatters — no sort primitive (sorts are the TPU's weakest op; the
+    former implementation paid 2-3 argsorts per verb call)."""
+    A = idx.shape[0]
+    safe = jnp.maximum(idx, 0)
+    seg = jnp.where(contenders, idx, R)
+    imax = jnp.iinfo(jnp.int32).max
+    best_p = jnp.full((R + 1,), imax, jnp.int32).at[seg].min(
+        priority, mode="drop")
+    tied = contenders & (priority == best_p[safe])
+    arrival = jnp.arange(A, dtype=jnp.int32)
+    best_i = jnp.full((R + 1,), A, jnp.int32).at[
+        jnp.where(tied, idx, R)].min(arrival, mode="drop")
+    return tied & (arrival == best_i[safe])
+
+
 def cas(words, idx, expected, new, priority=None):
     """Vectorized multi-request compare-and-swap with deterministic
     arbitration (the TPU adaptation of the RNIC's atomic CAS).
@@ -93,24 +112,24 @@ def cas(words, idx, expected, new, priority=None):
     request per word succeeds and installs `new`; later requests compare
     against the installed value (and fail unless they'd match it — for lock
     words `new` always has the lock bit set, so same-CID losers fail too).
+
+    Sort-free: among requests whose `expected` matches the stored word, the
+    (priority, arrival)-first one per word is found with the shared
+    :func:`_lex_winner` segment-min arbitration — O(A) scatter work, zero
+    sort primitives in the trace.  One pass suffices for lock-word CAS
+    because a winning CAS sets the lock bit, which never equals any
+    request's `expected` (expected values are unlocked words) — so all
+    later requests to that word fail regardless.
     """
     A = idx.shape[0]
+    R = words.shape[0]
     if priority is None:
         priority = jnp.arange(A, dtype=jnp.int32)
-    order = jnp.argsort(priority, stable=True)
-    idx_s, exp_s, new_s, = idx[order], expected[order], new[order]
-    cur = words[jnp.maximum(idx_s, 0)]
-    # Among requests whose `expected` matches the stored word, the first in
-    # priority order wins. One pass suffices for lock-word CAS because a
-    # winning CAS sets the lock bit, which never equals any request's
-    # `expected` (expected values are unlocked words) — so all later
-    # requests to that word fail regardless.
-    match = (cur == exp_s) & (idx_s >= 0)
-    cand = jnp.where(match, idx_s, -1)
-    ok_s = _is_first_occurrence(cand) & match
-    new_words = words.at[jnp.where(ok_s, idx_s, words.shape[0])].set(
-        new_s, mode="drop")
-    ok = jnp.zeros((A,), bool).at[order].set(ok_s)
+    priority = priority.astype(jnp.int32)
+    cur = words[jnp.maximum(idx, 0)]
+    match = (cur == expected) & (idx >= 0)
+    ok = _lex_winner(idx, priority, match, R)
+    new_words = words.at[jnp.where(ok, idx, R)].set(new, mode="drop")
     return ok, new_words
 
 
@@ -129,35 +148,32 @@ def fetch_add(words, idx, delta, priority=None):
     has applied its delta.  Unlike CAS, every in-bounds request succeeds
     (addition commutes, so there is no failure path); OOB (negative idx)
     requests fetch 0 and add nothing.
+
+    Sort-free: the per-word exclusive prefix in (priority, arrival) order
+    is a masked pairwise reduction — O(A^2) vector work in the request
+    batch, independent of R.  Every fetch_add caller in the repo posts
+    small batches (ticket claims, oracle cids, staleness epochs), where
+    dense O(A^2) mask work beats a sort on TPU by a wide margin; the old
+    path paid two argsorts plus a searchsorted.
     """
     A = idx.shape[0]
+    R = words.shape[0]
     if priority is None:
         priority = jnp.arange(A, dtype=jnp.int32)
-    order = jnp.argsort(priority, stable=True)
-    idx_s, d_s = idx[order], delta[order]
-    valid_s = idx_s >= 0
-    d_eff = jnp.where(valid_s, d_s, jnp.zeros_like(d_s))
-    # group by word (stable, so priority order survives within a group) and
-    # take the exclusive per-segment prefix sum: what landed before me.
-    order2 = jnp.argsort(idx_s, stable=True)
-    idx2, d2 = idx_s[order2], d_eff[order2]
-    ex = jnp.cumsum(d2) - d2
-    first = jnp.searchsorted(idx2, idx2, side="left")
-    seg_ex = (ex - ex[first]).astype(words.dtype)
-    old2 = words[jnp.maximum(idx2, 0)] + seg_ex
-    old_s = jnp.zeros_like(old2).at[order2].set(old2)
-    fetched = jnp.zeros_like(old_s).at[order].set(
-        jnp.where(valid_s, old_s, jnp.zeros_like(old_s)))
-    new_words = words.at[jnp.where(idx >= 0, idx, words.shape[0])].add(
-        delta, mode="drop")
+    priority = priority.astype(jnp.int32)
+    valid = idx >= 0
+    d_eff = jnp.where(valid, delta, jnp.zeros_like(delta))
+    arrival = jnp.arange(A, dtype=jnp.int32)
+    # before[j, i]: request j precedes i in lexicographic (priority,
+    # arrival) order; same[j, i]: both target the same in-bounds word.
+    before = (priority[:, None] < priority[None, :]) | (
+        (priority[:, None] == priority[None, :])
+        & (arrival[:, None] < arrival[None, :]))
+    same = (idx[:, None] == idx[None, :]) & valid[:, None] & valid[None, :]
+    prefix = jnp.sum(
+        jnp.where(before & same, d_eff[:, None], jnp.zeros_like(d_eff)[:, None]),
+        axis=0).astype(words.dtype)
+    fetched = jnp.where(valid, words[jnp.maximum(idx, 0)] + prefix,
+                        jnp.zeros((A,), words.dtype))
+    new_words = words.at[jnp.where(valid, idx, R)].add(delta, mode="drop")
     return fetched, new_words
-
-
-def _is_first_occurrence(x):
-    """x sorted by priority; True where this index value appears first.
-    Works for unsorted value arrays via argsort rank trick."""
-    order = jnp.argsort(x, stable=True)
-    xs = x[order]
-    first_sorted = jnp.concatenate(
-        [jnp.ones((1,), bool), xs[1:] != xs[:-1]])
-    return jnp.zeros_like(first_sorted).at[order].set(first_sorted)

@@ -1,0 +1,300 @@
+"""Packed wire format + sort-free hot path (ISSUE 5 tentpole).
+
+Three contracts guarded here:
+
+  * **bit-for-bit parity** — the packed single-buffer router reproduces the
+    old per-leaf argsort router exactly (fields, valid, dropped, sent) for
+    arbitrary mixed-dtype field pytrees, including drop / filter / overflow
+    cases (hypothesis property test + deterministic seeds);
+  * **jaxpr guards** — one ``route()`` under ``MeshTransport`` traces to
+    exactly ONE ``all_to_all`` per direction regardless of field count, and
+    the route / cas / fetch_add hot paths contain ZERO ``sort`` primitives;
+  * **plan reuse** — ``plan_route`` + ``route(plan=, mask=)`` matches a
+    fresh route of the masked dest, and RSI commit bins once for its two
+    rounds with message totals unchanged.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fabric
+from repro.core import rsi
+from repro.core.rsi import StoreCfg, TxnBatch
+from repro.fabric import LocalTransport, MeshTransport, router
+
+
+# ----------------------------------------------- the old per-leaf router --
+
+def reference_route(fields, dest, *, n, cap):
+    """The pre-packed-wire router (argsort + searchsorted, one scatter per
+    leaf), kept verbatim as the semantics oracle."""
+    A = dest.shape[0]
+    dest = dest.astype(jnp.int32)
+    order = jnp.argsort(dest, stable=True)
+    ds = dest[order]
+    first = jnp.searchsorted(ds, ds, side="left")
+    pos = jnp.arange(A, dtype=jnp.int32) - first.astype(jnp.int32)
+    deliverable = (ds >= 0) & (ds < n)
+    keep = (pos < cap) & deliverable
+    dropped = jnp.sum(((pos >= cap) & deliverable).astype(jnp.int32))
+    slot = jnp.where(keep, ds * cap + pos, n * cap)
+
+    def scatter(v):
+        buf = jnp.zeros((n * cap + 1,) + v.shape[1:], v.dtype)
+        return buf.at[slot].set(v[order], mode="drop")[:-1]
+
+    sent = jax.tree_util.tree_map(scatter, fields)
+    sent_valid = jnp.zeros((n * cap + 1,), jnp.int32).at[slot].set(
+        keep.astype(jnp.int32), mode="drop")[:-1]
+    return sent, sent_valid, dropped
+
+
+def _assert_parity(fields, dest, n, cap):
+    ref_fields, ref_valid, ref_dropped = reference_route(
+        fields, dest, n=n, cap=cap)
+    res = fabric.route(fields, dest, n=n, cap=cap)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), res.fields, ref_fields)
+    np.testing.assert_array_equal(np.asarray(res.valid),
+                                  np.asarray(ref_valid))
+    assert int(res.dropped) == int(ref_dropped)
+    # local route: sent is the same view
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), res.sent, ref_fields)
+
+
+def _mixed_fields(rng, A):
+    """A mixed-dtype multi-column request pytree (u8 / u32 / f32 / bool)."""
+    return {
+        "tag": jnp.asarray(rng.integers(0, 255, (A, 3)), jnp.uint8),
+        "key": jnp.asarray(rng.integers(0, 2**31, (A,)), jnp.uint32),
+        "val": jnp.asarray(rng.standard_normal((A, 2)), jnp.float32),
+        "flag": jnp.asarray(rng.integers(0, 2, (A,)) > 0),
+        "pay": jnp.asarray(rng.integers(0, 2**31, (A, 2, 3)), jnp.uint32),
+    }
+
+
+@pytest.mark.parametrize("seed,A,n,cap", [
+    (0, 64, 4, 8),       # overflow + filtered mix
+    (1, 33, 3, 64),      # roomy (no drops), odd sizes
+    (2, 128, 1, 16),     # single shard, heavy overflow
+    (3, 0, 2, 4),        # empty batch
+])
+def test_packed_route_matches_reference(seed, A, n, cap):
+    rng = np.random.default_rng(seed)
+    fields = _mixed_fields(rng, A)
+    # dest includes negatives (filtered), >= n (filtered), and valid ids
+    dest = jnp.asarray(rng.integers(-2, n + 2, (A,)), jnp.int32)
+    _assert_parity(fields, dest, n, cap)
+
+
+def test_packed_route_property():
+    """Hypothesis: packed route round-trips arbitrary mixed-dtype pytrees
+    bit-for-bit against the per-leaf reference, preserving drop / filter /
+    overflow semantics."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**31 - 1), A=st.integers(0, 96),
+               n=st.integers(1, 5), cap=st.integers(1, 32))
+    def prop(seed, A, n, cap):
+        rng = np.random.default_rng(seed)
+        _assert_parity(_mixed_fields(rng, A),
+                       jnp.asarray(rng.integers(-2, n + 2, (A,)), jnp.int32),
+                       n, cap)
+
+    prop()
+
+
+def test_pack_unpack_round_trip_bits():
+    """NaN payloads and sub-word lanes survive the u32 wire bit-for-bit."""
+    x = {"f": jnp.array([[np.nan, -0.0], [1.5, np.inf]], jnp.float32),
+         "b": jnp.array([[1, 2, 3, 4, 5], [6, 7, 8, 9, 10]], jnp.uint8),
+         "h": jnp.array([[1.5], [-2.0]], jnp.bfloat16)}
+    packed, treedef, specs = router.pack_fields(x)
+    assert packed.shape == (2, router.packed_row_words(x))
+    out, valid = router.unpack_fields(packed, treedef, specs)
+    np.testing.assert_array_equal(
+        np.asarray(x["f"]).view(np.uint32),
+        np.asarray(out["f"]).view(np.uint32))  # NaN bits preserved
+    np.testing.assert_array_equal(np.asarray(x["b"]), np.asarray(out["b"]))
+    np.testing.assert_array_equal(np.asarray(x["h"], np.float32),
+                                  np.asarray(out["h"], np.float32))
+    np.testing.assert_array_equal(np.asarray(valid), [1, 1])
+
+
+def test_pallas_backend_matches_reference_scatter():
+    """The kernels/radix_partition scatter path (TPU backend; interpret on
+    CPU) bins identically to the jnp reference scatter."""
+    rng = np.random.default_rng(7)
+    A, n, cap = 40, 3, 8
+    fields = {"k": jnp.asarray(rng.integers(0, 99, (A,)), jnp.uint32),
+              "v": jnp.asarray(rng.standard_normal((A, 2)), jnp.float32)}
+    dest = jnp.asarray(rng.integers(-1, n + 1, (A,)), jnp.int32)
+    ref = fabric.route(fields, dest, n=n, cap=cap)
+    pal = router.route(fields, dest, n=n, cap=cap, backend="pallas")
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), ref.fields, pal.fields)
+    np.testing.assert_array_equal(np.asarray(ref.valid),
+                                  np.asarray(pal.valid))
+    assert int(ref.dropped) == int(pal.dropped)
+    with pytest.raises(ValueError, match="backend"):
+        router.route(fields, dest, n=n, cap=cap, backend="nope")
+
+
+# ------------------------------------------------------------ RoutePlan --
+
+def test_plan_reuse_with_mask_matches_fresh_route():
+    rng = np.random.default_rng(3)
+    A, n, cap = 64, 4, 32          # roomy: no overflow, so masking is exact
+    fields = _mixed_fields(rng, A)
+    dest = jnp.asarray(rng.integers(0, n, (A,)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (A,)) > 0)
+    plan = fabric.plan_route(dest, n=n, cap=cap)
+    reused = fabric.route(fields, plan=plan, mask=mask)
+    # occupancy and payloads must match routing only the masked requests;
+    # with a reused plan the masked-out requests leave their slots EMPTY
+    # (slot stability), so compare against the reference by slot.
+    ref = fabric.route(fields, jnp.where(mask, dest, n), n=n, cap=cap)
+    assert int(reused.valid.sum()) == int(ref.valid.sum())
+    got = {int(k): (int(v), float(f)) for k, v, f, m in zip(
+        np.asarray(reused.fields["key"]), np.asarray(reused.valid),
+        np.asarray(reused.fields["val"])[:, 0],
+        np.asarray(reused.valid)) if m}
+    want = {int(k): (int(v), float(f)) for k, v, f, m in zip(
+        np.asarray(ref.fields["key"]), np.asarray(ref.valid),
+        np.asarray(ref.fields["val"])[:, 0],
+        np.asarray(ref.valid)) if m}
+    assert got == want
+    assert int(reused.dropped) == 0
+    with pytest.raises(ValueError, match="mask"):
+        fabric.route(fields, dest, n=n, cap=cap, mask=mask)
+    with pytest.raises(ValueError, match="needs n="):
+        fabric.route(fields, dest)
+
+
+def test_plan_overflow_dropped_respects_mask():
+    # 6 requests to shard 0, cap 2: plan drops 4; masking 3 of the
+    # overflowed requests leaves 1 counted drop
+    dest = jnp.zeros((6,), jnp.int32)
+    plan = fabric.plan_route(dest, n=1, cap=2)
+    assert int(plan.dropped) == 4
+    mask = jnp.array([True, True, True, False, False, False])
+    res = fabric.route({"v": jnp.arange(6)}, plan=plan, mask=mask)
+    assert int(res.dropped) == 1
+    np.testing.assert_array_equal(np.asarray(res.fields["v"]), [0, 1])
+
+
+def test_rsi_commit_bins_once_and_message_totals_unchanged():
+    """Acceptance: commit builds ONE plan for its two routed rounds, and
+    prepare+install message totals match the packed accounting (n*chunks
+    each) — plan reuse moves no extra bytes."""
+    nrec = 32
+    cfg = StoreCfg(num_records=nrec, payload_words=2, num_timestamps=64)
+    store = rsi.init_store(cfg)
+    store["words"] = jnp.full((nrec,), 1, jnp.uint32)
+    store["cids"] = store["cids"].at[:, 0].set(1)
+    rng = np.random.RandomState(0)
+    T, W = 8, 2
+    recs = np.stack([rng.permutation(nrec)[:W] for _ in range(T)])
+    txns = TxnBatch(
+        write_recs=jnp.asarray(recs, jnp.int32),
+        read_cids=jnp.full((T, W), 1, jnp.uint32),
+        new_payload=jnp.asarray(rng.randint(1, 99, (T, W, 2)), jnp.uint32),
+        cid=jnp.asarray(2 * np.arange(T) + 70, jnp.uint32))
+    tp = LocalTransport()
+    rsi.commit(store, txns, transport=tp)
+    s = tp.stats()
+    assert tp.plan_builds == 1                 # half the binning work
+    assert s["route"]["calls"] == 2
+    assert s["route"]["msgs"] == 2 * tp.n      # one buffer/peer/round
+    # bytes = packed rows (prepare: rec,exp,prio,slot + valid = 5 words;
+    # install: rec,val,do_pay + 2-word npay + valid = 6 words)
+    cap = T * W
+    assert s["route"]["bytes"] == tp.n * cap * 4 * (5 + 6)
+    tp.reset_stats()
+    assert tp.plan_builds == 0
+
+
+# ---------------------------------------------------------- jaxpr guards --
+
+#: the sort PRIMITIVE (e.g. "c:i32[8] = sort[dimension=0]") — not the
+#: "indices_are_sorted=..." scatter param, which contains "sort" too
+_SORT_EQN = re.compile(r"= sort\[")
+
+
+def _route_jaxpr(num_fields: int, chunks: int = 1) -> str:
+    mesh = jax.make_mesh((1,), ("data",))
+    tp = MeshTransport(mesh, "data")
+    A, cap = 16, 32
+
+    def body(*leaves):
+        fields = {f"f{i}": l for i, l in enumerate(leaves)}
+        dest = (leaves[0] % jnp.uint32(tp.n)).astype(jnp.int32)
+        res = tp.route(fields, dest, cap=cap, chunks=chunks)
+        return sum(jnp.sum(l) for l in jax.tree_util.tree_leaves(res.fields))
+
+    args = tuple(jnp.ones((A,), jnp.uint32) for _ in range(num_fields))
+    return str(jax.make_jaxpr(
+        lambda *a: tp.run(body, a, out_reps=True))(*args))
+
+
+@pytest.mark.parametrize("num_fields", [1, 5])
+def test_route_traces_to_one_all_to_all(num_fields):
+    jx = _route_jaxpr(num_fields)
+    assert jx.count("all_to_all") == 1, \
+        f"route with {num_fields} fields must be ONE all_to_all"
+    assert _SORT_EQN.search(jx) is None
+
+
+def test_chunked_route_one_all_to_all_inside_scan():
+    # chunks>1 pipelines via scan: the all_to_all appears once (in the
+    # scan body), not once per field
+    jx = _route_jaxpr(3, chunks=4)
+    assert jx.count("all_to_all") == 1
+    assert _SORT_EQN.search(jx) is None
+
+
+def test_route_response_path_is_one_all_to_all():
+    mesh = jax.make_mesh((1,), ("data",))
+    tp = MeshTransport(mesh, "data")
+
+    def body(v):
+        dest = (v % jnp.uint32(tp.n)).astype(jnp.int32)
+        res = tp.route({"a": v, "b": v, "c": v}, dest, cap=32)
+        grant = tp.exchange(res.valid)         # the response direction
+        return jnp.sum(res.fields["a"]) + jnp.sum(grant)
+
+    jx = str(jax.make_jaxpr(lambda v: tp.run(body, (v,), out_reps=True))(
+        jnp.ones((16,), jnp.uint32)))
+    assert jx.count("all_to_all") == 2         # one out + one back
+    assert _SORT_EQN.search(jx) is None
+
+
+def test_verb_hot_paths_are_sort_free():
+    words = jnp.zeros((64,), jnp.uint32)
+    idx = jnp.array([0, 1, 1, -1], jnp.int32)
+    u = jnp.ones((4,), jnp.uint32)
+    assert _SORT_EQN.search(str(jax.make_jaxpr(fabric.cas)(words, idx, u, u))) is None
+    assert _SORT_EQN.search(str(jax.make_jaxpr(fabric.fetch_add)(
+        words, idx, u))) is None
+
+
+def test_rsi_commit_trace_is_sort_free():
+    cfg = StoreCfg(num_records=16, payload_words=2, num_timestamps=32)
+    store = rsi.init_store(cfg)
+    txns = TxnBatch(write_recs=jnp.zeros((4, 2), jnp.int32),
+                    read_cids=jnp.zeros((4, 2), jnp.uint32),
+                    new_payload=jnp.zeros((4, 2, 2), jnp.uint32),
+                    cid=jnp.arange(4, dtype=jnp.uint32))
+    jx = str(jax.make_jaxpr(
+        lambda s, t: rsi.commit(s, t, transport=LocalTransport()))(
+            store, txns))
+    assert _SORT_EQN.search(jx) is None

@@ -1,4 +1,4 @@
-.PHONY: test test-fast bench bench-fig6 bench-fig9 bench-json bench-smoke docs-check dev-deps
+.PHONY: test test-fast bench bench-fig6 bench-fig9 bench-json bench-smoke check docs-check dev-deps
 
 test:            ## tier-1 suite (ROADMAP.md verify command)
 	PYTHONPATH=src python -m pytest -x -q
@@ -18,6 +18,9 @@ bench-smoke:     ## timed fig2 pass on CPU: measured_s schema check only
 	assert d['timed'] and d['measured_s'], 'BENCH_fig2.json missing measured_s'; \
 	assert all(s > 0 for s in d['measured_s'].values()), d['measured_s']; \
 	print('bench-smoke ok:', len(d['measured_s']), 'measured_s entries')"
+
+check:           ## fabriccheck: jaxpr lint + one-sided race detector
+	PYTHONPATH=src python -m repro.fabric.check --figure all -q
 
 bench-fig6:      ## RSI message economics (fabric transport counters)
 	PYTHONPATH=src python -m benchmarks.run --only fig6

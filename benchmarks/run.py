@@ -15,6 +15,11 @@ warmup + median-of-k harness (``benchmarks/timing.py``) and adds a
 the modeled numbers — the repo's falsifiable wall-clock baseline.  The
 harness errors if a figure forgets to emit it.
 
+``--check`` additionally runs ``fabriccheck`` (the jaxpr lint + one-sided
+race detector, ``repro.fabric.check``) over each figure's gating suites
+and embeds a ``check: {rules_run, violations}`` block in the JSON; any
+violation fails the run.
+
 ``--profile`` selects the network profile(s) the modeled/planned parts run
 under (``repro.fabric.netsim`` presets; ``all`` sweeps the paper's whole
 1GbE -> IPoIB -> FDR -> EDR axis).  Measured figures run their device work
@@ -78,6 +83,11 @@ def main() -> None:
     ap.add_argument("--time", action="store_true",
                     help="measure device wall-clock (warmup + median-of-k)"
                          " and emit measured_s per figure")
+    ap.add_argument("--check", action="store_true",
+                    help="run fabriccheck (jaxpr lint + race detector) "
+                         "over each figure's gating suites and embed a "
+                         "check: {rules_run, violations} block in the "
+                         "JSON (docs/check.md)")
     args = ap.parse_args()
     if args.profile is None:
         profiles = None                       # each module's default
@@ -97,6 +107,18 @@ def main() -> None:
             failed.append((name, e))
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
             continue
+        if args.check:
+            from repro.fabric import check as fabric_check
+            summ = fabric_check.summarize(fabric_check.check_figure(name))
+            extras["check"] = {"rules_run": summ["rules_run"],
+                               "violations": summ["violations"],
+                               "targets": summ["targets"]}
+            status = "clean" if summ["ok"] else \
+                f"{len(summ['violations'])} violation(s)"
+            print(f"{name}/fabriccheck: {len(summ['targets'])} targets, "
+                  f"{status}", file=sys.stderr)
+            if not summ["ok"]:
+                failed.append((name, RuntimeError("fabriccheck violations")))
         for row, us, derived in rows:
             print(f"{row},{us:.2f},{derived}")
         for row, s in sorted(extras.get("measured_s", {}).items()):

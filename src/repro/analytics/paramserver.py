@@ -35,6 +35,7 @@ for the straggler experiment this enables.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -117,6 +118,19 @@ class ParameterServer:
         self._epoch = jnp.zeros((1,), jnp.uint32)
         self._cache: dict = {}
         self._residuals: dict = {}
+        rec = getattr(self.transport, "recorder", None)
+        if rec is not None:
+            # the epoch word is a version clock: its FETCH_ADD publishes
+            # every write before it, and pulls must stay within k of it
+            rec.declare_epoch("ps/epoch", params_region="ps/params",
+                              staleness=self.staleness)
+
+    def _agent(self, worker):
+        """Attribute this worker's verbs to its own logical agent in an
+        attached schedule recorder (no-op without one)."""
+        rec = getattr(self.transport, "recorder", None)
+        return rec.agent(f"ps/worker{worker}") if rec is not None \
+            else nullcontext()
 
     # ------------------------------------------------------------ layout --
 
@@ -156,15 +170,27 @@ class ParameterServer:
         is never older than ``current - staleness``.
         """
         t = self.transport
-        cur = int(t.read(self._epoch, jnp.zeros((1,), jnp.int32))[0])
-        cached = self._cache.get(worker)
-        if cached is not None and cur - cached.epoch <= self.staleness:
-            return cached.tree, cached.epoch
-        shards = t.read(self._params,
-                        jnp.arange(self.num_shards, dtype=jnp.int32))
-        tree = self._to_tree(shards)
-        self._cache[worker] = _Cache(tree, cur)
+        with self._agent(worker):
+            cur = int(t.read(self._epoch, jnp.zeros((1,), jnp.int32),
+                             region="ps/epoch")[0])
+            cached = self._cache.get(worker)
+            if cached is not None and cur - cached.epoch <= self.staleness:
+                self._note_pull(worker, cached.epoch, cur)
+                return cached.tree, cached.epoch
+            shards = t.read(self._params,
+                            jnp.arange(self.num_shards, dtype=jnp.int32),
+                            region="ps/params")
+            tree = self._to_tree(shards)
+            self._cache[worker] = _Cache(tree, cur)
+            self._note_pull(worker, cur, cur)
         return tree, cur
+
+    def _note_pull(self, worker, observed: int, current: int):
+        rec = getattr(self.transport, "recorder", None)
+        if rec is not None:
+            rec.note_pull(region="ps/params", worker=worker,
+                          observed_epoch=observed, current_epoch=current,
+                          staleness=self.staleness)
 
     # -------------------------------------------------------------- push --
 
@@ -183,16 +209,23 @@ class ParameterServer:
                        scale.reshape(flat.shape[0], -1))
         else:
             payload = (flat,)
-        recv = self.transport.run(self._push_body, payload, False)
-        g_tree = self._to_tree(recv)
-        new_tree = self.apply_fn(self._to_tree(self._params), g_tree)
-        # server-local install: the apply runs at the owner shard, so the
-        # write never crosses the wire — only pull READs and routed pushes
-        # pay bytes (the counters price exactly that)
-        self._params = self._to_shards(ravel_pytree(new_tree)[0])
-        fetched, self._epoch = self.transport.fetch_add(
-            self._epoch, jnp.zeros((1,), jnp.int32),
-            jnp.ones((1,), jnp.uint32))
+        with self._agent(worker):
+            recv = self.transport.run(self._push_body, payload, False)
+            g_tree = self._to_tree(recv)
+            new_tree = self.apply_fn(self._to_tree(self._params), g_tree)
+            # server-local install: the apply runs at the owner shard, so
+            # the write never crosses the wire — only pull READs and routed
+            # pushes pay bytes (the counters price exactly that).  Log it
+            # record-only so the race detector sees the param mutation the
+            # epoch FETCH_ADD publishes.
+            self._params = self._to_shards(ravel_pytree(new_tree)[0])
+            self.transport.record_access(
+                "WRITE", "ps/params",
+                jnp.arange(self.num_shards, dtype=jnp.int32),
+                region_len=self.num_shards)
+            fetched, self._epoch = self.transport.fetch_add(
+                self._epoch, jnp.zeros((1,), jnp.int32),
+                jnp.ones((1,), jnp.uint32), region="ps/epoch")
         return int(fetched[0]) + 1
 
     def _push_body(self, *leaves):

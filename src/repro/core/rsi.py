@@ -84,7 +84,7 @@ jax.tree_util.register_dataclass(
 
 
 def commit(store, txns: TxnBatch, *, transport=None, priority=None,
-           chunks: int = 1):
+           chunks: int = 1, region_ns: str = ""):
     """Commit a batch of concurrent transactions over a fabric transport.
     Returns (committed (T,) bool, new_store).
 
@@ -98,6 +98,10 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
       ties fall back to routed-buffer position, which favors lower peers.
     chunks: pipeline the routed prepare/install buffers (selective
       signaling); must divide T*W per shard.
+    region_ns: region-name prefix (e.g. ``"acct/"``) for the schedule
+      recorder when one is attached to the transport; a wave boundary is
+      recorded so the race detector's lock-protocol rule can tie install
+      WRITEs to this wave's CAS acquisitions.
     """
     if transport is None:
         transport = LocalTransport()
@@ -105,6 +109,9 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
     if priority is None:
         priority = jnp.arange(T, dtype=jnp.int32)
     n = transport.n
+    recorder = getattr(transport, "recorder", None)
+    if recorder is not None:
+        recorder.begin_wave(f"{region_ns}commit")
 
     def body(words, payload, cids, bitvec, wrecs, rcids, npay, cid, prio):
         Tl, W = wrecs.shape
@@ -135,10 +142,12 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
         # ---- local CAS arbitration on my records (global prio = fair)
         lrec = jnp.where(rvalid > 0, r["rec"] % r_local, -1)  # local row
         ok, words = transport.cas(words, lrec, r["exp"],
-                                  LOCK_BIT | r["exp"], priority=r["prio"])
+                                  LOCK_BIT | r["exp"], priority=r["prio"],
+                                  region=region_ns + "words")
         # ---- grants return to requesters (paired reverse exchange lands
-        # each response in the slot it was sent from)
-        grant = transport.exchange(ok.astype(jnp.int32))
+        # each response in the slot it was sent from); the grant bit
+        # crosses the collective in the packed u32 wire width
+        grant = transport.exchange(ok.astype(jnp.uint32)).astype(jnp.int32)
         granted = jnp.zeros((Tl * W,), jnp.int32).at[res.sent["slot"]].add(
             grant * res.sent_valid)
         gmat = granted.reshape(Tl, W) > 0
@@ -156,7 +165,8 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
         res2 = transport.route(inst, plan=plan, mask=act, chunks=chunks)
         r2, v2 = res2.fields, res2.valid
         lrec2 = jnp.where(v2 > 0, r2["rec"] % r_local, -1)
-        words = transport.write(words, lrec2, r2["val"])
+        words = transport.write(words, lrec2, r2["val"],
+                                region=region_ns + "words")
         # version install: shift slots left, newest at 0.
         # NB: negative indices WRAP in jnp scatters — use an explicit OOB
         # sentinel (row N) so mode="drop" actually drops skipped writes.
@@ -175,6 +185,13 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
             cids = jnp.where(has_commit[:, None], shifted_cid, cids)
         payload = payload.at[idx_pay, 0].set(r2["npay"], mode="drop")
         cids = cids.at[idx_pay, 0].set(r2["val"], mode="drop")
+        # install bytes are already billed to the routed buffer; the
+        # scatter itself is invisible to the verbs, so log it record-only
+        # for the race detector's lock-protocol / conflict rules
+        transport.record_access("WRITE", region_ns + "payload", pay_idx,
+                                region_len=oob)
+        transport.record_access("WRITE", region_ns + "cids", pay_idx,
+                                region_len=oob)
         # ---- timestamp bitvector [msg 3, unsignaled]: clients flip their
         # own (locally owned) bits; aborted txns also burn their slot (the
         # paper's wrap/skip bookkeeping). cids are pre-assigned in shard-
@@ -182,6 +199,9 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
         cbit = cid.astype(jnp.int32) - me * bv_local
         cbit = jnp.where((cbit >= 0) & (cbit < bv_local), cbit, bv_local)
         bitvec = bitvec.at[cbit].set(True, mode="drop")
+        transport.record_access(
+            "WRITE", region_ns + "bitvec",
+            jnp.where(cbit < bv_local, cbit, -1), region_len=bv_local)
         return txn_ok, words, payload, cids, bitvec
 
     txn_ok, words, payload, cids, bitvec = transport.run(
@@ -190,24 +210,36 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
          txns.write_recs, txns.read_cids, txns.new_payload, txns.cid,
          priority),
         out_reps=(False, False, False, False, False))
+    if recorder is not None:
+        # the caller blocks on txn_ok, which rides the install round trip:
+        # everything this wave installed happens-before whatever follows
+        recorder.fence("commit-complete")
     return txn_ok, {"words": words, "payload": payload, "cids": cids,
                     "bitvec": bitvec}
 
 
-def read_snapshot(store, recs, rid, *, transport=None):
+def read_snapshot(store, recs, rid, *, transport=None, region_ns: str = ""):
     """Read records at snapshot `rid`: newest version with CID <= rid.
     Returns (payload (..., m), cid, ok — False if no visible version).
 
     transport: when given, the version-array gathers go through the
     transport's READ verb so the snapshot traffic is counted (the paper's
-    one-sided read path); None = plain local indexing."""
-    rd = (transport.read if transport is not None
-          else (lambda region, idx: region[idx]))
-    cids = rd(store["cids"], recs)                 # (..., slots)
+    one-sided read path); None = plain local indexing.  region_ns prefixes
+    the region names seen by an attached schedule recorder."""
+    if transport is not None:
+        def rd(region, idx, _name=None):
+            return transport.read(
+                region, idx,
+                region=(region_ns + _name) if _name else None)
+    else:
+        def rd(region, idx, _name=None):
+            return region[idx]
+    cids = rd(store["cids"], recs, "cids")         # (..., slots)
     vis = (cids <= rid) & (cids > 0)
     slot = jnp.argmax(vis, axis=-1)
     ok = jnp.any(vis, axis=-1)
     pay = jnp.take_along_axis(
-        rd(store["payload"], recs), slot[..., None, None], axis=-2)[..., 0, :]
+        rd(store["payload"], recs, "payload"),
+        slot[..., None, None], axis=-2)[..., 0, :]
     cid = jnp.take_along_axis(cids, slot[..., None], axis=-1)[..., 0]
     return pay, cid, ok

@@ -18,10 +18,11 @@ from dataclasses import dataclass
 from repro.core import rsi
 
 
-def commit(store, txns, priority=None, transport=None, chunks: int = 1):
+def commit(store, txns, priority=None, transport=None, chunks: int = 1,
+           region_ns: str = ""):
     """2PC/SI commit of a txn batch via a TM: same schedule as RSI."""
     return rsi.commit(store, txns, transport=transport, priority=priority,
-                      chunks=chunks)
+                      chunks=chunks, region_ns=region_ns)
 
 
 def message_counts(n_rm: int) -> dict:

@@ -36,8 +36,10 @@ def claim_ticket_ranges(head, amounts, priority=None, transport=None):
     [starts[w], starts[w] + amounts[w]).
     """
     idx = jnp.zeros(amounts.shape, jnp.int32)      # all hit word 0
-    return (transport or fabric).fetch_add(head, idx, amounts,
-                                           priority=priority)
+    if transport is None:
+        return fabric.fetch_add(head, idx, amounts, priority=priority)
+    return transport.fetch_add(head, idx, amounts, priority=priority,
+                               region="queue/head")
 
 
 @dataclass

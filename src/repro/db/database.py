@@ -135,7 +135,7 @@ class Database:
         (every client bumps the same counter — §3.2's decentralized pull)."""
         fetched, self._clock = self.transport.fetch_add(
             self._clock, jnp.zeros((k,), jnp.int32),
-            jnp.ones((k,), jnp.uint32))
+            jnp.ones((k,), jnp.uint32), region="oracle/clock")
         return np.asarray(fetched, np.uint32)
 
     def read_timestamp(self) -> int:
@@ -156,7 +156,8 @@ class Database:
         t = self.table(table)
         rid = self.read_timestamp() if rid is None else int(rid)
         return rsi.read_snapshot(t.store, jnp.asarray(recs, jnp.int32),
-                                 jnp.uint32(rid), transport=self.transport)
+                                 jnp.uint32(rid), transport=self.transport,
+                                 region_ns=f"{t.schema.name}/")
 
     def commit(self, sessions: List[Session], *, chunks: int = 1,
                priority=None) -> np.ndarray:
@@ -198,7 +199,8 @@ class Database:
                             read_cids=jnp.asarray(rcids),
                             new_payload=jnp.asarray(pay),
                             cid=jnp.asarray(cids))
-        ok, t.store = self._jit_commit(isolation, chunks)(
+        ok, t.store = self._jit_commit(isolation, chunks,
+                                       f"{t.schema.name}/")(
             t.store, txns,
             None if priority is None else jnp.asarray(priority, jnp.int32))
         if self.transport.n > 1:
@@ -210,21 +212,28 @@ class Database:
             # (committed and aborted txns both burn theirs)
             t.store["bitvec"] = self.transport.write(
                 t.store["bitvec"], jnp.asarray(cids, jnp.int32),
-                jnp.ones((T,), bool))
+                jnp.ones((T,), bool), region=f"{t.schema.name}/bitvec")
         ok = np.asarray(ok)
         for s, committed, cid in zip(sessions, ok, cids):
             s.committed = bool(committed)
             s.cid = int(cid)
         return np.asarray([s.committed for s in wave], bool)
 
-    def _jit_commit(self, isolation: str, chunks: int):
-        key = ("commit", isolation, chunks)
+    def _jit_commit(self, isolation: str, chunks: int, region_ns: str = ""):
+        key = ("commit", isolation, chunks, region_ns)
+        backend = _BACKENDS[isolation]
+        if getattr(self.transport, "recorder", None) is not None:
+            # a schedule recorder needs concrete verb indices: run the
+            # commit body eagerly (uncached) so the recorded access
+            # intervals are exact, not whole-region conservative
+            return lambda store, txns, prio: backend(
+                store, txns, transport=self.transport, priority=prio,
+                chunks=chunks, region_ns=region_ns)
         if key not in self._jit_cache:
-            backend = _BACKENDS[isolation]
             self._jit_cache[key] = jax.jit(
                 lambda store, txns, prio: backend(
                     store, txns, transport=self.transport, priority=prio,
-                    chunks=chunks))
+                    chunks=chunks, region_ns=region_ns))
         return self._jit_cache[key]
 
     # ------------------------------------------------------------ queries --

@@ -68,7 +68,8 @@ class Session:
         t = self.db.table(table)
         return rsi.read_snapshot(t.store, jnp.asarray(recs, jnp.int32),
                                  jnp.uint32(self.rid),
-                                 transport=self.db.transport)
+                                 transport=self.db.transport,
+                                 region_ns=f"{t.schema.name}/")
 
     def put(self, table, recs, payload, read_cids=None):
         """Buffer writes: recs (W,), payload (W, m); read_cids (W,) is the

@@ -146,7 +146,8 @@ class Table:
         expected = jnp.zeros((cand.size,), WORD)
         new = jnp.full((cand.size,), LOCK_BIT | jnp.uint32(tag), WORD)
         ok, words = self._transport.cas(self.store["words"], idx, expected,
-                                        new)
+                                        new,
+                                        region=f"{self.schema.name}/words")
         self.store["words"] = words
         return [int(i) for i in cand[np.array(ok)]]
 
@@ -154,7 +155,7 @@ class Table:
         """Unlock a claimed row (one-sided WRITE of the lock word)."""
         self.store["words"] = self._transport.write(
             self.store["words"], jnp.array([row], jnp.int32),
-            jnp.zeros((1,), WORD))
+            jnp.zeros((1,), WORD), region=f"{self.schema.name}/words")
 
     def locked_rows(self) -> int:
         return int(np.count_nonzero(np.array(self.store["words"]) &

@@ -65,15 +65,22 @@ class Transport:
     """Base transport: verb dispatch + trace-time message/byte accounting.
 
     profile: optional network profile (name or instance) — when bound,
-    counted verbs also accumulate modeled wall-clock (``modeled_s``)."""
+    counted verbs also accumulate modeled wall-clock (``modeled_s``).
+
+    recorder: optional :class:`~repro.fabric.check.ScheduleRecorder` —
+    when attached, verbs called with a ``region=`` name append access
+    records and synchronization points append ordering edges, feeding the
+    one-sided race detector (``repro.fabric.check``, pass 2).  Recording
+    is observation only: it never changes computation or counters."""
 
     axis: Optional[str] = None
 
-    def __init__(self, profile=None):
+    def __init__(self, profile=None, recorder=None):
         self._stats: dict = {}
         self.plan_builds: int = 0
         self.profile = (netsim.get_profile(profile)
                         if profile is not None else None)
+        self.recorder = recorder
 
     # ------------------------------------------------------ accounting ---
 
@@ -106,24 +113,57 @@ class Transport:
                              "profile= here or at construction")
         return p.modeled_time(self._stats)
 
+    # ------------------------------------------------------- recording ---
+
+    def record_access(self, verb: str, region, idx, *,
+                      region_len: Optional[int] = None, meta=None):
+        """Record-only hook: log a region access that did not go through a
+        verb method (e.g. the RSI payload install, whose bytes are already
+        billed to the routed install buffer).  No counting, no compute."""
+        if self.recorder is not None and region is not None:
+            self.recorder.record(verb, region, idx, region_len=region_len,
+                                 meta=meta)
+
+    def _rec_fence(self, kind: str):
+        """Record a global ordering edge (a route round-trip / collective
+        synchronizes every agent's view of the regions)."""
+        if self.recorder is not None:
+            self.recorder.fence(kind)
+
     # ----------------------------------------------------------- verbs ---
 
-    def read(self, region_arr, idx):
+    def read(self, region_arr, idx, *, region=None):
         self._count("read", idx.size, idx.size * _row_bytes(region_arr))
-        return _verbs.read(region_arr, idx)
+        out = _verbs.read(region_arr, idx)
+        if self.recorder is not None and region is not None:
+            self.recorder.record("READ", region, idx,
+                                 region_len=region_arr.shape[0])
+        return out
 
-    def write(self, region_arr, idx, values):
+    def write(self, region_arr, idx, values, *, region=None):
         self._count("write", idx.size, values.size * values.dtype.itemsize)
-        return _verbs.write(region_arr, idx, values)
+        out = _verbs.write(region_arr, idx, values)
+        if self.recorder is not None and region is not None:
+            self.recorder.record("WRITE", region, idx,
+                                 region_len=region_arr.shape[0])
+        return out
 
-    def cas(self, words, idx, expected, new, priority=None):
+    def cas(self, words, idx, expected, new, priority=None, *, region=None):
         self._count("cas", idx.size,
                     idx.size * (expected.dtype.itemsize + new.dtype.itemsize))
-        return _verbs.cas(words, idx, expected, new, priority=priority)
+        ok, out = _verbs.cas(words, idx, expected, new, priority=priority)
+        if self.recorder is not None and region is not None:
+            self.recorder.record("CAS", region, idx,
+                                 region_len=words.shape[0], ok=ok, new=new)
+        return ok, out
 
-    def fetch_add(self, words, idx, delta, priority=None):
+    def fetch_add(self, words, idx, delta, priority=None, *, region=None):
         self._count("fetch_add", idx.size, idx.size * delta.dtype.itemsize)
-        return _verbs.fetch_add(words, idx, delta, priority=priority)
+        out = _verbs.fetch_add(words, idx, delta, priority=priority)
+        if self.recorder is not None and region is not None:
+            self.recorder.record("FETCH_ADD", region, idx,
+                                 region_len=words.shape[0])
+        return out
 
     # ---------------------------------------------------------- router ---
 
@@ -149,9 +189,11 @@ class Transport:
         nbytes = n * cap * _router.WORD_BYTES * _router.packed_row_words(
             fields)
         self._count("route", n * chunks, nbytes)
-        return _router.route(fields, dest, n=n, cap=cap, chunks=chunks,
-                             exchange=self._make_exchange(cap, chunks),
-                             plan=plan, mask=mask)
+        res = _router.route(fields, dest, n=n, cap=cap, chunks=chunks,
+                            exchange=self._make_exchange(cap, chunks),
+                            plan=plan, mask=mask)
+        self._rec_fence("route-roundtrip")
+        return res
 
     def plan_route(self, dest, *, cap: int):
         """Precompute the slot assignment for ``dest`` (one sort-free
@@ -211,14 +253,17 @@ class LocalTransport(Transport):
 
     def psum(self, x):
         self._count("psum", 1, x.size * x.dtype.itemsize)
+        self._rec_fence("psum")
         return x
 
     def all_gather(self, x):
         self._count("all_gather", 1, x.size * x.dtype.itemsize)
+        self._rec_fence("all_gather")
         return x
 
     def exchange(self, v, chunks: int = 1):
         self._count("exchange", chunks, v.size * v.dtype.itemsize)
+        self._rec_fence("exchange")
         return v
 
 
@@ -255,15 +300,18 @@ class MeshTransport(Transport):
 
     def psum(self, x):
         self._count("psum", self.n, x.size * x.dtype.itemsize)
+        self._rec_fence("psum")
         return jax.lax.psum(x, self.axis)
 
     def all_gather(self, x):
         self._count("all_gather", self.n,
                     self.n * x.size * x.dtype.itemsize)
+        self._rec_fence("all_gather")
         return jax.lax.all_gather(x, self.axis, tiled=True)
 
     def exchange(self, v, chunks: int = 1):
         cap = v.shape[0] // self.n
         self._count("exchange", self.n * chunks,
                     v.size * v.dtype.itemsize)
+        self._rec_fence("exchange")
         return _router.chunked_all_to_all(v, self.axis, self.n, cap, chunks)

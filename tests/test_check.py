@@ -1,0 +1,261 @@
+"""fabric-check: the jaxpr lint engine + one-sided race detector (ISSUE 6).
+
+Covers both passes and the CLI:
+
+  * **lint engine** — the structural walker recurses into scan/cond/pjit
+    sub-jaxprs with path attribution; each rule (sort-free, collective
+    budget, no-host-transfer, packed-wire) fires on a seeded-bad trace and
+    stays quiet on the real hot paths;
+  * **race detector** — the four seeded-violation fixtures from ISSUE 6
+    (unfenced WRITE/WRITE overlap, lost-update RMW next to a FETCH_ADD,
+    install-without-lock wave, stale pull beyond k) are each flagged with
+    the offending verb pair + region named, while the REAL protocols (RSI
+    and 2PC session waves, lock-table claims, the PS trainer loop) record
+    clean schedules;
+  * **CLI** — ``python -m repro.fabric.check`` exits 0 on the figure gate
+    and the summary carries the ``{rules_run, violations}`` block that
+    ``benchmarks/run.py --check`` embeds.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fabric import LocalTransport, check
+
+LOCK = 1 << 31
+
+
+# ------------------------------------------------------- pass 1: lint ----
+
+def test_walker_attributes_primitives_inside_scan():
+    def f(x):
+        def step(c, _):
+            return jnp.sort(c), None
+        y, _ = jax.lax.scan(step, x, None, length=3)
+        return y
+
+    jaxpr = jax.make_jaxpr(f)(jnp.arange(8.0))
+    # one syntactic sort site, even though the scan runs it 3 times
+    assert check.count_primitive(jaxpr, "sort") == 1
+    rep = check.lint_jaxpr(jaxpr, [check.SortFree()], target="scan-sort")
+    assert not rep.ok
+    assert "scan" in rep.violations[0].where   # path names the enclosure
+
+
+def test_collective_budget_exact_counts():
+    import jax.numpy as _  # noqa: F401
+    mesh = jax.make_mesh((1,), ("ax",))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(v):
+        return jax.lax.all_to_all(v.reshape(1, -1), "ax", 0, 0).reshape(-1)
+
+    f = shard_map(body, mesh=mesh, in_specs=P("ax"), out_specs=P("ax"),
+                  check_rep=False)
+    jaxpr = jax.make_jaxpr(f)(jnp.zeros((4,), jnp.uint32))
+    ok = check.lint_jaxpr(jaxpr, [check.CollectiveBudget(
+        {"all_to_all": 1})], target="one")
+    assert ok.ok, ok.render()
+    bad = check.lint_jaxpr(jaxpr, [check.CollectiveBudget(
+        {"all_to_all": 2})], target="two")
+    assert not bad.ok
+    assert "1 all_to_all site(s) traced, budget is 2" in \
+        bad.violations[0].detail
+
+
+def test_no_host_transfer_flags_callbacks():
+    def f(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype),
+            x)
+
+    rep = check.lint_fn(f, jnp.ones((4,)), rules=[check.NoHostTransfer()],
+                        target="cb")
+    assert not rep.ok
+    assert "pure_callback" in rep.violations[0].detail
+
+
+def test_packed_wire_flags_non_u32_collective():
+    mesh = jax.make_mesh((1,), ("ax",))
+    from repro.fabric import MeshTransport
+    tp = MeshTransport(mesh, "ax")
+    # an f32 buffer on the exchange bypasses the packed u32 wire
+    rep = check.lint_fn(
+        lambda v: tp.run(lambda x: tp.exchange(x), (v,), False),
+        jnp.zeros((4,), jnp.float32), rules=[check.PackedWire()],
+        target="raw-f32")
+    assert not rep.ok
+    assert "float32" in rep.violations[0].detail
+    # the same buffer as packed u32 passes
+    rep = check.lint_fn(
+        lambda v: tp.run(lambda x: tp.exchange(x), (v,), False),
+        jnp.zeros((4,), jnp.uint32), rules=[check.PackedWire()],
+        target="u32")
+    assert rep.ok, rep.render()
+
+
+# ------------------------------ pass 2: seeded-violation fixtures --------
+
+def _rec_tp():
+    rec = check.ScheduleRecorder()
+    return rec, LocalTransport(recorder=rec)
+
+
+def test_fixture_unfenced_write_write_overlap():
+    rec, t = _rec_tp()
+    arr = jnp.zeros((16,), jnp.uint32)
+    t.write(arr, jnp.array([2, 3, 4], jnp.int32),
+            jnp.ones((3,), jnp.uint32), region="buf")
+    t.write(arr, jnp.array([4, 5], jnp.int32),
+            jnp.ones((2,), jnp.uint32), region="buf")
+    rep = check.check_schedule(rec, target="fixture-ww")
+    assert [v.rule for v in rep.violations] == ["ww-race"]
+    v = rep.violations[0]
+    assert v.where == "buf"                       # region named
+    assert "WRITE#0" in v.detail and "WRITE#1" in v.detail  # verb pair
+    assert "rows {4}" in v.detail                 # exact overlap
+
+
+def test_fence_orders_the_same_writes():
+    rec, t = _rec_tp()
+    arr = jnp.zeros((16,), jnp.uint32)
+    t.write(arr, jnp.array([2, 3, 4], jnp.int32),
+            jnp.ones((3,), jnp.uint32), region="buf")
+    rec.fence("flush")                            # an explicit barrier
+    t.write(arr, jnp.array([4, 5], jnp.int32),
+            jnp.ones((2,), jnp.uint32), region="buf")
+    assert check.check_schedule(rec).ok
+
+
+def test_fixture_lost_update_rmw_next_to_fetch_add():
+    rec, t = _rec_tp()
+    words = jnp.zeros((8,), jnp.uint32)
+    with rec.agent("w0"):
+        v = t.read(words, jnp.array([1], jnp.int32), region="ctr")
+        t.write(words, jnp.array([1], jnp.int32), v + 1, region="ctr")
+    with rec.agent("w1"):
+        t.fetch_add(words, jnp.array([1], jnp.int32),
+                    jnp.ones((1,), jnp.uint32), region="ctr")
+    rep = check.check_schedule(rec, target="fixture-lost-update")
+    rules = {v.rule for v in rep.violations}
+    assert rules == {"lost-update"}
+    blob = " ".join(v.detail for v in rep.violations)
+    assert "FETCH_ADD#2" in blob and "WRITE#1" in blob   # verb pair
+    assert all(v.where == "ctr" for v in rep.violations)  # region named
+
+
+def test_fixture_install_without_lock_wave():
+    rec, t = _rec_tp()
+    rec.declare_locks("T/words", ("T/payload",), lock_bit=LOCK)
+    words = jnp.zeros((8,), jnp.uint32)
+    pay = jnp.zeros((8, 2), jnp.uint32)
+    rec.begin_wave()
+    t.cas(words, jnp.array([1, 2], jnp.int32), jnp.zeros((2,), jnp.uint32),
+          jnp.full((2,), LOCK | 5, jnp.uint32), region="T/words")
+    # row 2 was CAS-acquired this wave; row 3 was not
+    t.write(pay, jnp.array([2, 3], jnp.int32),
+            jnp.ones((2, 2), jnp.uint32), region="T/payload")
+    rep = check.check_schedule(rec, target="fixture-lock")
+    assert [v.rule for v in rep.violations] == ["lock-protocol"]
+    v = rep.violations[0]
+    assert v.where == "T/payload"
+    assert "WRITE#1" in v.detail and "rows {3}" in v.detail
+    assert "T/words" in v.detail and "wave 1" in v.detail
+
+
+def test_fixture_stale_pull_beyond_k():
+    rec = check.ScheduleRecorder()
+    rec.note_pull(region="ps/params", worker="w0", observed_epoch=1,
+                  current_epoch=5, staleness=2)
+    rec.note_pull(region="ps/params", worker="w1", observed_epoch=4,
+                  current_epoch=5, staleness=2)   # within bound: clean
+    rep = check.check_schedule(rec, target="fixture-stale")
+    assert [v.rule for v in rep.violations] == ["staleness"]
+    v = rep.violations[0]
+    assert v.where == "ps/params" and "'w0'" in v.detail
+    assert "lag 4" in v.detail and "k=2" in v.detail
+
+
+def test_read_write_race_and_completion_fence():
+    rec, t = _rec_tp()
+    arr = jnp.zeros((8,), jnp.uint32)
+    with rec.agent("reader"):
+        t.read(arr, jnp.array([3], jnp.int32), region="r")
+    with rec.agent("writer"):
+        t.write(arr, jnp.array([3], jnp.int32),
+                jnp.ones((1,), jnp.uint32), region="r")
+    rep = check.check_schedule(rec)
+    assert [v.rule for v in rep.violations] == ["rw-race"]
+    # same-agent: the READ's completion fence orders the pair
+    rec, t = _rec_tp()
+    v = t.read(arr, jnp.array([3], jnp.int32), region="r")
+    t.write(arr, jnp.array([3], jnp.int32), v + 1, region="r")
+    assert check.check_schedule(rec).ok
+
+
+# ------------------------- negatives: real protocols record clean --------
+
+@pytest.mark.parametrize("isolation", ["rsi", "2pc"])
+def test_real_session_waves_record_clean(isolation):
+    rec = check.record_session_waves(isolation)
+    assert rec.accesses, "schedule must not be trivially empty"
+    assert {a.region for a in rec.accesses} >= {
+        "acct/words", "acct/payload", "acct/cids", "oracle/clock"}
+    rep = check.check_schedule(rec, target=f"sessions/{isolation}")
+    assert rep.ok, rep.render()
+
+
+def test_real_paramserver_trainer_records_clean():
+    rec = check.record_paramserver(staleness=2, steps=3, workers=2)
+    assert any(n["kind"] == "ps_pull" for n in rec.notes)
+    assert any(a.verb == "FETCH_ADD" and a.region == "ps/epoch"
+               for a in rec.accesses)
+    rep = check.check_schedule(rec, target="paramserver/trainer")
+    assert rep.ok, rep.render()
+
+
+def test_lock_table_claims_record_clean():
+    # claim_locks CAS + release WRITE on the same lock column must be
+    # ordered by the CAS completion fence, not flagged as a lost update
+    from repro.db import Database
+    rec = check.ScheduleRecorder()
+    db = Database(LocalTransport(recorder=rec))
+    slots = db.create_table("slots", 8, payload_words=1, num_timestamps=16)
+    claimed = slots.claim_locks(3, tag=7)
+    assert len(claimed) == 3
+    for row in claimed:
+        slots.release_lock(row)
+    rep = check.check_schedule(rec, target="lock-table")
+    assert rep.ok, rep.render()
+
+
+# --------------------------------------------------- CLI + summaries -----
+
+def test_summarize_schema():
+    reports = [check.lint_route(2), check.lint_route(2, response=True)]
+    s = check.summarize(reports)
+    assert s["ok"] and s["violations"] == []
+    assert "collective-budget" in s["rules_run"]
+    assert len(s["targets"]) == 2
+
+
+def test_cli_figure_gate_passes(tmp_path, capsys):
+    out = tmp_path / "check.json"
+    rc = check.main(["--figure", "fig2", "-q", "--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert payload["ok"] and payload["violations"] == []
+    assert set(payload) >= {"rules_run", "violations", "targets"}
+    capsys.readouterr()
+
+
+def test_cli_exit_codes_reflect_violations(monkeypatch, capsys):
+    bad = check.Report("seeded", ("sort-free",),
+                       [check.Violation("sort-free", "<top>", "seeded")])
+    monkeypatch.setitem(check.SUITES, "verbs", lambda: [bad])
+    assert check.main(["--suite", "verbs", "-q"]) == 1
+    capsys.readouterr()

@@ -8,13 +8,13 @@ Three contracts guarded here:
     cases (hypothesis property test + deterministic seeds);
   * **jaxpr guards** — one ``route()`` under ``MeshTransport`` traces to
     exactly ONE ``all_to_all`` per direction regardless of field count, and
-    the route / cas / fetch_add hot paths contain ZERO ``sort`` primitives;
+    the route / cas / fetch_add hot paths contain ZERO ``sort`` primitives
+    — enforced through the ``repro.fabric.check`` analyzer (structural
+    jaxpr walk, not string matching; see docs/check.md);
   * **plan reuse** — ``plan_route`` + ``route(plan=, mask=)`` matches a
     fresh route of the masked dest, and RSI commit bins once for its two
     rounds with message totals unchanged.
 """
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -23,7 +23,7 @@ import pytest
 from repro import fabric
 from repro.core import rsi
 from repro.core.rsi import StoreCfg, TxnBatch
-from repro.fabric import LocalTransport, MeshTransport, router
+from repro.fabric import LocalTransport, check, router
 
 
 # ----------------------------------------------- the old per-leaf router --
@@ -224,77 +224,53 @@ def test_rsi_commit_bins_once_and_message_totals_unchanged():
 
 
 # ---------------------------------------------------------- jaxpr guards --
-
-#: the sort PRIMITIVE (e.g. "c:i32[8] = sort[dimension=0]") — not the
-#: "indices_are_sorted=..." scatter param, which contains "sort" too
-_SORT_EQN = re.compile(r"= sort\[")
-
-
-def _route_jaxpr(num_fields: int, chunks: int = 1) -> str:
-    mesh = jax.make_mesh((1,), ("data",))
-    tp = MeshTransport(mesh, "data")
-    A, cap = 16, 32
-
-    def body(*leaves):
-        fields = {f"f{i}": l for i, l in enumerate(leaves)}
-        dest = (leaves[0] % jnp.uint32(tp.n)).astype(jnp.int32)
-        res = tp.route(fields, dest, cap=cap, chunks=chunks)
-        return sum(jnp.sum(l) for l in jax.tree_util.tree_leaves(res.fields))
-
-    args = tuple(jnp.ones((A,), jnp.uint32) for _ in range(num_fields))
-    return str(jax.make_jaxpr(
-        lambda *a: tp.run(body, a, out_reps=True))(*args))
+# All trace invariants run through the repro.fabric.check analyzer: a
+# structural jaxpr walk (scan/cond/pjit sub-jaxprs included) with the
+# collective-budget / sort-free / no-host-transfer / packed-wire rules —
+# no string matching against the printed jaxpr.
 
 
 @pytest.mark.parametrize("num_fields", [1, 5])
 def test_route_traces_to_one_all_to_all(num_fields):
-    jx = _route_jaxpr(num_fields)
-    assert jx.count("all_to_all") == 1, \
-        f"route with {num_fields} fields must be ONE all_to_all"
-    assert _SORT_EQN.search(jx) is None
+    rep = check.lint_route(num_fields)
+    assert rep.ok, rep.render()
 
 
 def test_chunked_route_one_all_to_all_inside_scan():
-    # chunks>1 pipelines via scan: the all_to_all appears once (in the
-    # scan body), not once per field
-    jx = _route_jaxpr(3, chunks=4)
-    assert jx.count("all_to_all") == 1
-    assert _SORT_EQN.search(jx) is None
+    # chunks>1 pipelines via scan: the analyzer counts the all_to_all
+    # *site* inside the scan body once, so the budget of 1 still holds
+    rep = check.lint_route(3, chunks=4)
+    assert rep.ok, rep.render()
 
 
 def test_route_response_path_is_one_all_to_all():
-    mesh = jax.make_mesh((1,), ("data",))
-    tp = MeshTransport(mesh, "data")
-
-    def body(v):
-        dest = (v % jnp.uint32(tp.n)).astype(jnp.int32)
-        res = tp.route({"a": v, "b": v, "c": v}, dest, cap=32)
-        grant = tp.exchange(res.valid)         # the response direction
-        return jnp.sum(res.fields["a"]) + jnp.sum(grant)
-
-    jx = str(jax.make_jaxpr(lambda v: tp.run(body, (v,), out_reps=True))(
-        jnp.ones((16,), jnp.uint32)))
-    assert jx.count("all_to_all") == 2         # one out + one back
-    assert _SORT_EQN.search(jx) is None
+    rep = check.lint_route(3, response=True)   # budget: one out + one back
+    assert rep.ok, rep.render()
 
 
 def test_verb_hot_paths_are_sort_free():
-    words = jnp.zeros((64,), jnp.uint32)
-    idx = jnp.array([0, 1, 1, -1], jnp.int32)
-    u = jnp.ones((4,), jnp.uint32)
-    assert _SORT_EQN.search(str(jax.make_jaxpr(fabric.cas)(words, idx, u, u))) is None
-    assert _SORT_EQN.search(str(jax.make_jaxpr(fabric.fetch_add)(
-        words, idx, u))) is None
+    for rep in check.lint_verbs():
+        assert rep.ok, rep.render()
 
 
-def test_rsi_commit_trace_is_sort_free():
+@pytest.mark.parametrize("protocol", ["rsi", "2pc"])
+def test_commit_trace_is_sort_free_with_exact_collectives(protocol):
+    rep = check.lint_commit(protocol)
+    assert rep.ok, rep.render()
+
+
+def test_local_commit_trace_is_sort_free():
+    # the single-shard degenerate case, checked via the raw analyzer API
     cfg = StoreCfg(num_records=16, payload_words=2, num_timestamps=32)
     store = rsi.init_store(cfg)
     txns = TxnBatch(write_recs=jnp.zeros((4, 2), jnp.int32),
                     read_cids=jnp.zeros((4, 2), jnp.uint32),
                     new_payload=jnp.zeros((4, 2, 2), jnp.uint32),
                     cid=jnp.arange(4, dtype=jnp.uint32))
-    jx = str(jax.make_jaxpr(
+    jaxpr = jax.make_jaxpr(
         lambda s, t: rsi.commit(s, t, transport=LocalTransport()))(
-            store, txns))
-    assert _SORT_EQN.search(jx) is None
+            store, txns)
+    assert check.count_primitive(jaxpr, "sort") == 0
+    rep = check.lint_jaxpr(jaxpr, check.HOT_PATH_RULES,
+                           target="rsi.commit[local]")
+    assert rep.ok, rep.render()

@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""fabriccheck — jaxpr lint + one-sided race detector for the verb fabric.
+
+Thin launcher for ``python -m repro.fabric.check`` that works from a repo
+checkout without PYTHONPATH gymnastics.  See docs/check.md for the rule
+catalog and ``--help`` for flags.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.fabric.check import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

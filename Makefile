@@ -12,12 +12,20 @@ bench:           ## all paper figures (CSV to stdout)
 bench-json:      ## all figures + BENCH_<figure>.json result files
 	PYTHONPATH=src python -m benchmarks.run --json .
 
-bench-smoke:     ## timed fig2 pass on CPU: measured_s schema check only
+bench-smoke:     ## timed fig2+fig10 pass on CPU: measured_s schema check only
 	PYTHONPATH=src python -m benchmarks.run --figure fig2 --time --json /tmp/bench-smoke
 	python -c "import json; d = json.load(open('/tmp/bench-smoke/BENCH_fig2.json')); \
 	assert d['timed'] and d['measured_s'], 'BENCH_fig2.json missing measured_s'; \
 	assert all(s > 0 for s in d['measured_s'].values()), d['measured_s']; \
 	print('bench-smoke ok:', len(d['measured_s']), 'measured_s entries')"
+	PYTHONPATH=src python -m benchmarks.run --figure fig10 --time --check --json /tmp/bench-smoke
+	python -c "import json; d = json.load(open('/tmp/bench-smoke/BENCH_fig10.json')); \
+	assert d['timed'] and d['measured_s'], 'BENCH_fig10.json missing measured_s'; \
+	assert all(s > 0 for s in d['measured_s'].values()), d['measured_s']; \
+	assert d['crossover'] and d['windows'] and d['replay'], 'fig10 extras missing'; \
+	assert not d['check']['violations'], d['check']; \
+	print('bench-smoke ok: fig10', len(d['measured_s']), 'measured_s entries,', \
+	d['check']['rules_run'], 'check rules clean')"
 
 check:           ## fabriccheck: jaxpr lint + one-sided race detector
 	PYTHONPATH=src python -m repro.fabric.check --figure all -q

@@ -40,7 +40,7 @@ import os
 import sys
 
 from benchmarks import (fig2_microbench, fig6_rsi, fig7_costmodel,
-                        fig8a_joins, fig8b_agg, fig9_ml)
+                        fig8a_joins, fig8b_agg, fig9_ml, fig10_contention)
 from repro.fabric import netsim
 
 MODULES = {
@@ -50,7 +50,14 @@ MODULES = {
     "fig8a": fig8a_joins,
     "fig8b": fig8b_agg,
     "fig9": fig9_ml,
+    "fig10": fig10_contention,
 }
+
+
+def _figure_key(name: str):
+    """Numeric figure order: fig2 ... fig9, fig10 (not lexicographic)."""
+    digits = "".join(c for c in name if c.isdigit())
+    return (int(digits) if digits else 0, name)
 
 
 def _run_module(mod, profiles, timed):
@@ -70,8 +77,10 @@ def _run_module(mod, profiles, timed):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", "--figure", dest="only", default=None,
-                    choices=sorted(MODULES),
-                    help="run one figure (--figure is an alias)")
+                    metavar="FIGURE",
+                    help="run one figure (--figure is an alias; see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="list the registered figures and exit")
     ap.add_argument("--profile", default=None,
                     metavar="NAME|all",
                     help="network profile preset(s): one of "
@@ -89,13 +98,21 @@ def main() -> None:
                          "check: {rules_run, violations} block in the "
                          "JSON (docs/check.md)")
     args = ap.parse_args()
+    if args.list:
+        for name in sorted(MODULES, key=_figure_key):
+            doc = (MODULES[name].__doc__ or "").strip().splitlines()[0]
+            print(f"{name:<7} {doc}")
+        return
+    if args.only is not None and args.only not in MODULES:
+        ap.error(f"unknown figure {args.only!r} — valid figures: "
+                 f"{', '.join(sorted(MODULES, key=_figure_key))}")
     if args.profile is None:
         profiles = None                       # each module's default
     elif args.profile == "all":
         profiles = tuple(netsim.PROFILES)
     else:
         profiles = (netsim.get_profile(args.profile).name,)
-    names = [args.only] if args.only else sorted(MODULES)
+    names = [args.only] if args.only else sorted(MODULES, key=_figure_key)
     if args.json:
         os.makedirs(args.json, exist_ok=True)
     print("name,us_per_call,derived")

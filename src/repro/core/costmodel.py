@@ -76,15 +76,25 @@ def t_ghj_bloom(nr, ns, net: str, sel: float):
 
 def t_rdma_ghj(nr, ns, net: str = "rdma"):
     """RDMA GHJ (§5.2): receiver writes happen in the background
-    (selective signaling) => partition cost is one memory pass per side."""
-    part = t_mem(nr) + t_mem(ns)
+    (selective signaling) => partition cost is one memory pass per side —
+    as long as the wire keeps up.  §5.2's derivation assumes
+    c_net ~ c_mem; when the *effective* per-byte cost rises above that
+    (a contended fabric — e.g. ``sim.contended_profile`` under
+    ``Planner(load=...)``) the hidden wire becomes the bottleneck and the
+    overlapped partition pass degrades to the wire rate."""
+    part = max(t_mem(nr) + t_mem(ns), t_net(nr + ns, net))
     return part + t_join_radix(nr, ns)
 
 
 def t_rrj(nr, ns, net: str = "rdma"):
     """RRJ (§5.2): network partition fused with the radix pass;
-    T = 2 c_mem (wR+wS) (assuming c_net ~ c_mem and one pass)."""
-    return 2 * (t_mem(nr) + t_mem(ns))
+    T = 2 c_mem (wR+wS) (assuming c_net ~ c_mem and one pass).  The fused
+    pass streams every tuple over the wire once, so — like t_rdma_ghj —
+    it runs at max(memory, wire) rate: free only while the network keeps
+    up, degrading under contention (which is exactly what makes the
+    fig10 load crossover possible: RRJ ships full relations, the bloom
+    variant ships the reduced fraction)."""
+    return max(2 * (t_mem(nr) + t_mem(ns)), t_net(nr + ns, net))
 
 
 AGG_GROUP_BYTES = 16          # group row on the wire: u32 key + u64 + pad

@@ -244,12 +244,15 @@ class Database:
             raise KeyError(f"no table {name!r}")
         return Plan("scan", table=name)
 
-    def _planner_for(self, profile) -> Planner:
-        """The db's planner, or a per-profile one (same modeled cluster)
-        for sweeping the 1GbE -> EDR axis without touching db state."""
-        if profile is None:
+    def _planner_for(self, profile, load: int = 0) -> Planner:
+        """The db's planner, or a per-(profile, load) one (same modeled
+        cluster) for sweeping the 1GbE -> EDR axis and the tenant-load
+        axis without touching db state."""
+        load = max(int(load), 0)
+        if profile is None and load == self.planner.load:
             return self.planner
-        return Planner(net=profile, nodes=self.planner.nodes)
+        base = profile if profile is not None else self.planner.profile
+        return Planner(net=base, nodes=self.planner.nodes, load=load)
 
     def _analyze(self, plan: Plan, planner: Optional[Planner] = None):
         """(kind, alternatives argmin-first, cost-model inputs)."""
@@ -264,7 +267,7 @@ class Database:
             nr, ns = rtab.stats()["bytes"], stab.stats()["bytes"]
             alts = planner.join_alternatives(nr, ns, sel)
             return kind, alts, {"nr_bytes": nr, "ns_bytes": ns, "sel": sel,
-                                "net": planner.net,
+                                "net": planner.net, "load": planner.load,
                                 "profile": planner.profile.name}
         if kind == "group_agg":
             if plan.groups is None:
@@ -277,20 +280,25 @@ class Database:
             alts = planner.agg_alternatives(nb, plan.groups)
             return kind, alts, {"nbytes": nb, "groups": plan.groups,
                                 "nodes": planner.nodes,
-                                "net": planner.net,
+                                "net": planner.net, "load": planner.load,
                                 "profile": planner.profile.name}
         raise ValueError(f"cannot plan a bare {kind} — add .aggregate()")
 
-    def explain(self, plan: Plan, *, profile=None) -> Explain:
+    def explain(self, plan: Plan, *, profile=None, load: int = 0) -> Explain:
         """Costed alternatives for a plan, argmin first — no execution.
         `profile` prices the plan on another point of the network axis
-        (preset name or NetworkProfile) without changing db state."""
-        kind, alts, inputs = self._analyze(plan, self._planner_for(profile))
+        (preset name or NetworkProfile) without changing db state;
+        `load` prices it under that many concurrent tenant streams
+        (``sim.contended_profile``, docs/netsim.md) — the argmin under
+        contention can differ from the isolated one (fig10)."""
+        kind, alts, inputs = self._analyze(plan,
+                                           self._planner_for(profile, load))
         return Explain(plan.describe(), kind, tuple(alts), inputs)
 
     def execute(self, plan: Plan, *, force_variant: Optional[str] = None,
                 capacity_factor: float = 2.0,
-                calibrate: bool = False, profile=None) -> QueryResult:
+                calibrate: bool = False, profile=None,
+                load: int = 0) -> QueryResult:
         """Run a plan with the planner's choice (or `force_variant` for
         benchmark grids).  Returns value + the full costed explain.
         `profile` plans under another network profile (the executed
@@ -302,7 +310,8 @@ class Database:
         modeled compute share, so later plans are priced with the measured
         wire rate.  Needs a fresh plan shape on this database — counters
         accumulate at trace time only (see docs/fabric.md)."""
-        kind, alts, inputs = self._analyze(plan, self._planner_for(profile))
+        kind, alts, inputs = self._analyze(plan,
+                                           self._planner_for(profile, load))
         variant = force_variant or Planner.chosen(alts)
         if force_variant:
             known = {a.name for a in alts}
@@ -359,9 +368,26 @@ class Database:
     def _stats_delta(self, before: dict) -> dict:
         out = {}
         for verb, s in self.transport.stats().items():
-            b = before.get(verb, {"calls": 0, "msgs": 0, "bytes": 0})
-            d = {k: s[k] - b.get(k, 0) for k in s}
-            if any(d.values()):
+            b = before.get(verb, {})
+            d = {}
+            for k, v in s.items():
+                if isinstance(v, dict):
+                    # queue_hist: histogram delta per bucket
+                    bv = b.get(k, {})
+                    hd = {kk: vv - bv.get(kk, 0) for kk, vv in v.items()
+                          if vv - bv.get(kk, 0)}
+                    if hd:
+                        d[k] = hd
+                elif k == "peak_outstanding":
+                    # a high-water mark, not a counter: report the
+                    # current peak, it cannot be differenced
+                    d[k] = v
+                else:
+                    d[k] = v - b.get(k, 0)
+            numeric = {k: v for k, v in d.items()
+                       if k not in ("peak_outstanding",)
+                       and not isinstance(v, dict)}
+            if any(numeric.values()):
                 out[verb] = d
         return out
 

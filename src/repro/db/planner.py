@@ -61,12 +61,23 @@ class Planner:
     nodes:  cluster size the cost model assumes (the §5.4 deployment); the
             Database passes the transport's shard count, or the paper's
             4-node cluster for the single-shard degenerate case.
+    load:   concurrent tenant streams sharing the fabric (0 = isolated —
+            the classic analytic argmin).  A non-zero load derates the
+            wire constant via ``repro.fabric.sim.contended_profile`` — a
+            discrete-event measurement of a probe transfer's effective
+            bandwidth while `load` tenants saturate the same ingress — so
+            plan choice under contention can differ from the isolated
+            argmin (the fig10 crossover: rrj ships full relations and
+            loses its fused-pass advantage as the wire degrades, while
+            ghj_bloom ships only the reduced fraction).
     """
 
-    def __init__(self, net="rdma", nodes: int = 4):
+    def __init__(self, net="rdma", nodes: int = 4, load: int = 0):
         self.profile = netsim.get_profile(net)    # ValueError on unknown
         self.net = net if isinstance(net, str) else self.profile.name
         self.nodes = max(int(nodes), 1)
+        self.load = max(int(load), 0)
+        self._contended: Optional[netsim.NetworkProfile] = None
         self._c_net_measured: Optional[float] = None
 
     # ------------------------------------------------------- calibration --
@@ -100,8 +111,8 @@ class Planner:
                 "ghj": costmodel.t_ghj(nr, ns, free),
                 "ghj_bloom": costmodel.t_ghj_bloom(nr, ns, free,
                                                    inputs["sel"]),
-                "rdma_ghj": costmodel.t_rdma_ghj(nr, ns),
-                "rrj": costmodel.t_rrj(nr, ns),
+                "rdma_ghj": costmodel.t_rdma_ghj(nr, ns, free),
+                "rrj": costmodel.t_rrj(nr, ns, free),
             }[variant]
         nb, groups = inputs["nbytes"], inputs["groups"]
         return {
@@ -112,11 +123,30 @@ class Planner:
         }[variant]
 
     @property
+    def loaded_profile(self) -> netsim.NetworkProfile:
+        """The profile as the simulator measures it under ``self.load``
+        concurrent tenant streams (identity at load=0); cached — the
+        contention sim runs once per planner."""
+        if self.load == 0:
+            return self.profile
+        if self._contended is None:
+            from repro.fabric import sim
+            self._contended = sim.contended_profile(self.profile,
+                                                    self.load)
+        return self._contended
+
+    @property
     def effective_net(self):
         """What t_net is priced with: the measured s/byte if calibrated,
-        else the network profile."""
-        return (self._c_net_measured if self._c_net_measured is not None
-                else self.profile)
+        else the (load-derated) network profile.  A calibrated constant
+        was fit at some ambient load; scale it by the same simulated
+        degradation factor the profile would see."""
+        if self._c_net_measured is not None:
+            if self.load == 0:
+                return self._c_net_measured
+            scale = self.loaded_profile.c_net / self.profile.c_net
+            return self._c_net_measured * scale
+        return self.loaded_profile
 
     # -------------------------------------------------------------- joins --
 
@@ -132,9 +162,9 @@ class Planner:
             Alternative("ghj_bloom",
                         costmodel.t_ghj_bloom(nr_bytes, ns_bytes, net, sel)),
             Alternative("rdma_ghj",
-                        costmodel.t_rdma_ghj(nr_bytes, ns_bytes),
+                        costmodel.t_rdma_ghj(nr_bytes, ns_bytes, net),
                         feasible=rdma_ok),
-            Alternative("rrj", costmodel.t_rrj(nr_bytes, ns_bytes),
+            Alternative("rrj", costmodel.t_rrj(nr_bytes, ns_bytes, net),
                         feasible=rdma_ok),
         ]
         return _choose(alts)

@@ -17,12 +17,24 @@ One RDMA-style substrate for every distributed protocol in the repo:
              (``PROFILES``); a transport bound to one accumulates modeled
              wall-clock next to its counters, and ``from_counters()`` fits
              a profile back from measured counters
+  sim        netsim v2 — the discrete-event contention simulator
+             (``FabricSim``): shared full-duplex links, NIC message-rate
+             credit, bounded in-flight windows, fair-share/FCFS link
+             schedulers.  ``Transport(tracer=EventTracer())`` records any
+             run as a ``SimEvent`` trace; ``sim.replay`` re-simulates it
+             under load on any profile, and ``sim.contended_profile``
+             feeds the measured degradation back to the db planner
+             (``load=``)
 
 RSI commit, all four join variants, and RDMA-AGG compose against this layer
 and nothing else — the paper's "redesign the system around the verbs".
 """
 from repro.fabric.netsim import (ALIASES, PROFILES, NetworkProfile,
                                  from_counters, get_profile)
+from repro.fabric.sim import (EventTracer, FabricSim, SimEvent, SimResult,
+                              analytic_lower_bound, analytic_time,
+                              contended_profile, replay, synthetic_load,
+                              window_sweep)
 from repro.fabric.router import (RoutePlan, RouteResult, bucket_ranks,
                                  chunked_all_to_all, pack_fields,
                                  packed_row_words, plan_route, route,
@@ -39,4 +51,7 @@ __all__ = [
     "Transport", "LocalTransport", "MeshTransport",
     "NetworkProfile", "PROFILES", "ALIASES", "get_profile",
     "from_counters",
+    "FabricSim", "SimEvent", "SimResult", "EventTracer", "replay",
+    "analytic_time", "analytic_lower_bound", "synthetic_load",
+    "window_sweep", "contended_profile",
 ]

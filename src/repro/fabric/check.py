@@ -608,16 +608,20 @@ def _mesh_transport():
 
 
 def lint_route(num_fields: int = 3, *, chunks: int = 1,
-               response: bool = False) -> Report:
+               response: bool = False, window: int = 0) -> Report:
     """Lint one routed direction (plus optionally the paired response
     exchange) under a mesh transport: budget = 1 all_to_all out (+1 back),
-    sort-free, host-free, packed u32 on the wire."""
+    sort-free, host-free, packed u32 on the wire.  ``window`` routes with
+    a doorbell-batching cap — a pacing declaration the simulator prices
+    (docs/netsim.md); the lint proves the windowed trace emits the SAME
+    single fused collective (pacing must never unfuse the wire)."""
     tp = _mesh_transport()
 
     def body(*leaves):
         fields = {f"f{i}": leaf for i, leaf in enumerate(leaves)}
         dest = (leaves[0] % jnp.uint32(tp.n)).astype(jnp.int32)
-        res = tp.route(fields, dest, cap=ROUTE_CAP, chunks=chunks)
+        res = tp.route(fields, dest, cap=ROUTE_CAP, chunks=chunks,
+                       window=window or None)
         tot = sum(jnp.sum(leaf) for leaf in
                   jax.tree_util.tree_leaves(res.fields))
         if response:
@@ -628,7 +632,8 @@ def lint_route(num_fields: int = 3, *, chunks: int = 1,
     args = tuple(jnp.ones((16,), jnp.uint32) for _ in range(num_fields))
     budget = CollectiveBudget({"all_to_all": 2 if response else 1})
     name = (f"route[{num_fields}f,chunks={chunks}"
-            + (",response" if response else "") + "]")
+            + (",response" if response else "")
+            + (f",window={window}" if window else "") + "]")
     return lint_fn(lambda *a: tp.run(body, a, out_reps=True), *args,
                    rules=HOT_PATH_RULES + (budget,), target=name)
 
@@ -752,9 +757,36 @@ def record_paramserver(staleness: int = 2, steps: int = 3,
     return rec
 
 
+def record_windowed_route() -> ScheduleRecorder:
+    """Route a windowed request batch through a recording transport with
+    one-sided WRITEs landing before and READs after: a windowed route is
+    still ONE fused collective round trip, i.e. a global fence, so the
+    cross-agent write->read pairs on the landed region must record clean
+    at any window (pacing changes timing, never ordering)."""
+    from repro.fabric import LocalTransport
+    rec = ScheduleRecorder()
+    tp = LocalTransport()
+    tp.recorder = rec
+    words = jnp.zeros((64,), jnp.uint32)
+    idx = jnp.arange(8, dtype=jnp.int32)
+    with rec.agent("producer"):
+        words = tp.write(words, idx, jnp.ones((8,), jnp.uint32),
+                         region="sim/buf")
+    plan = tp.plan_route(idx % tp.n, cap=16, window=4)
+    tp.route({"k": words[:8]}, plan=plan)       # windowed global fence
+    with rec.agent("consumer"):
+        tp.read(words, idx, region="sim/buf")
+    return rec
+
+
 def race_sessions(isolation: str = "rsi") -> Report:
     return check_schedule(record_session_waves(isolation),
                           target=f"sessions/{isolation}")
+
+
+def race_windowed_route() -> Report:
+    return check_schedule(record_windowed_route(),
+                          target="route/windowed")
 
 
 def race_paramserver() -> Report:
@@ -772,6 +804,12 @@ SUITES: Dict[str, Callable[[], List[Report]]] = {
     "rsi": lambda: [lint_commit("rsi"), race_sessions("rsi")],
     "2pc": lambda: [lint_commit("2pc"), race_sessions("2pc")],
     "paramserver": lambda: [lint_ps_push(), race_paramserver()],
+    # netsim v2: the windowed route trace must stay within the
+    # one-collective budget, and the write->route(window)->read schedule
+    # must record race-clean (docs/netsim.md "netsim v2")
+    "sim": lambda: [lint_route(2, window=4),
+                    lint_route(3, chunks=2, window=2),
+                    race_windowed_route()],
 }
 
 #: which check suites gate each paper figure (benchmarks/run.py --check).
@@ -782,6 +820,7 @@ FIGURE_SUITES: Dict[str, Tuple[str, ...]] = {
     "fig8a": ("route",),
     "fig8b": ("route", "verbs"),
     "fig9": ("paramserver", "route"),
+    "fig10": ("sim", "route"),
 }
 
 

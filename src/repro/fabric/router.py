@@ -191,12 +191,20 @@ class RoutePlan:
               scatter discards them.
     keep:     (A,) bool — deliverable and within capacity.
     overflow: (A,) bool — deliverable but beyond capacity (the drop set).
+    window:   doorbell-batching contract: max in-flight messages per peer
+              buffer when the exchange is replayed under contention
+              (0 = post everything at once).  The fused collective's wire
+              bits are identical at any window — this is a *pacing*
+              declaration, priced by ``repro.fabric.sim`` (the transport
+              records it in the event trace and the outstanding-request
+              counters; see docs/netsim.md "netsim v2").
     """
     n: int
     cap: int
     slot: jnp.ndarray
     keep: jnp.ndarray
     overflow: jnp.ndarray
+    window: int = 0
 
     @property
     def dropped(self) -> jnp.ndarray:
@@ -205,18 +213,29 @@ class RoutePlan:
 
 jax.tree_util.register_dataclass(
     RoutePlan, data_fields=["slot", "keep", "overflow"],
-    meta_fields=["n", "cap"])
+    meta_fields=["n", "cap", "window"])
 
 
-def plan_route(dest, *, n: int, cap: int) -> RoutePlan:
-    """One-pass rank-in-bucket slot assignment for ``dest`` (sort-free)."""
+def _check_window(window) -> int:
+    window = int(window or 0)
+    if window < 0:
+        raise ValueError(f"window must be >= 0 (0 = unbounded), "
+                         f"got {window}")
+    return window
+
+
+def plan_route(dest, *, n: int, cap: int, window: int = 0) -> RoutePlan:
+    """One-pass rank-in-bucket slot assignment for ``dest`` (sort-free).
+    ``window`` declares the plan's doorbell-batching cap (see
+    :class:`RoutePlan`)."""
     dest = dest.astype(jnp.int32)
     deliverable = (dest >= 0) & (dest < n)
     rank = bucket_ranks(dest, n)
     keep = deliverable & (rank < cap)
     overflow = deliverable & (rank >= cap)
     slot = jnp.where(keep, dest * cap + rank, n * cap)
-    return RoutePlan(n=n, cap=cap, slot=slot, keep=keep, overflow=overflow)
+    return RoutePlan(n=n, cap=cap, slot=slot, keep=keep, overflow=overflow,
+                     window=_check_window(window))
 
 
 # ------------------------------------------------------------- scatter ---
@@ -259,17 +278,23 @@ def route(fields, dest=None, *, n: Optional[int] = None,
           cap: Optional[int] = None, chunks: int = 1,
           exchange: Optional[Callable] = None,
           plan: Optional[RoutePlan] = None, mask=None,
-          backend: Optional[str] = None) -> RouteResult:
+          backend: Optional[str] = None,
+          window: Optional[int] = None) -> RouteResult:
     """Radix-partition `fields` by `dest` into (n, cap) fixed buffers and
     (optionally) exchange them — as ONE packed wire buffer, one
     ``all_to_all``, any number of fields.  Pass ``plan=`` (from
     :func:`plan_route`) to reuse a slot assignment across rounds; ``mask=``
-    (requires a plan) unsends requests without re-ranking.  See the module
-    docstring for semantics."""
+    (requires a plan) unsends requests without re-ranking.  ``window=``
+    declares the doorbell-batching cap for contention pricing (defaults to
+    the plan's; the exchanged bits are identical at any window — see
+    :class:`RoutePlan`).  See the module docstring for semantics."""
     if plan is not None:
         n, cap = plan.n, plan.cap
+        if window is None:
+            window = plan.window
     elif n is None or cap is None:
         raise ValueError("route needs n= and cap= (or a plan=)")
+    _check_window(window)
     if mask is not None and plan is None:
         raise ValueError("mask= only applies to a reused plan=")
     if cap % chunks != 0:

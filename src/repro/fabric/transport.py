@@ -61,6 +61,15 @@ def _row_bytes(arr) -> int:
     return math.prod(arr.shape[1:]) * arr.dtype.itemsize
 
 
+def _depth_bucket(q: int) -> str:
+    """Power-of-two queue-depth bucket label: "0", "1-1", "2-3", "4-7"...
+    (string keys so the histogram survives a BENCH_*.json round trip)."""
+    if q <= 0:
+        return "0"
+    lo = 1 << (int(q).bit_length() - 1)
+    return f"{lo}-{2 * lo - 1}"
+
+
 class Transport:
     """Base transport: verb dispatch + trace-time message/byte accounting.
 
@@ -71,32 +80,62 @@ class Transport:
     when attached, verbs called with a ``region=`` name append access
     records and synchronization points append ordering edges, feeding the
     one-sided race detector (``repro.fabric.check``, pass 2).  Recording
-    is observation only: it never changes computation or counters."""
+    is observation only: it never changes computation or counters.
+
+    tracer: optional :class:`~repro.fabric.sim.EventTracer` — when
+    attached, every counted verb call also appends one
+    :class:`~repro.fabric.sim.SimEvent` (verb, msgs, bytes, issue order,
+    window), so the run can be replayed through the contention simulator
+    on any profile (``sim.replay``, docs/netsim.md "netsim v2").  Like
+    the recorder, observation only."""
 
     axis: Optional[str] = None
 
-    def __init__(self, profile=None, recorder=None):
+    def __init__(self, profile=None, recorder=None, tracer=None):
         self._stats: dict = {}
         self.plan_builds: int = 0
         self.profile = (netsim.get_profile(profile)
                         if profile is not None else None)
         self.recorder = recorder
+        self.tracer = tracer
 
     # ------------------------------------------------------ accounting ---
 
-    def _count(self, verb: str, msgs: int, nbytes: int):
+    def _count(self, verb: str, msgs: int, nbytes: int, *,
+               window: int = 0, collective: bool = False):
         s = self._stats.setdefault(verb, {"calls": 0, "msgs": 0, "bytes": 0})
         s["calls"] += 1
         s["msgs"] += int(msgs)
         s["bytes"] += int(nbytes)
+        # load context for from_counters() fits: how many of this call's
+        # requests are in flight at once (the declared window caps it) and
+        # how many sat queued behind the window, bucketed
+        outstanding = min(int(msgs), window) if window else int(msgs)
+        s["peak_outstanding"] = max(s.get("peak_outstanding", 0),
+                                    outstanding)
+        hist = s.setdefault("queue_hist", {})
+        b = _depth_bucket(int(msgs) - outstanding)
+        hist[b] = hist.get(b, 0) + 1
         if self.profile is not None:
             s["modeled_s"] = (s.get("modeled_s", 0.0)
                               + self.profile.t_call(msgs, nbytes))
+        if self.tracer is not None:
+            self.tracer.emit(verb, msgs, nbytes,
+                             collective=collective and self.n > 1,
+                             window=window, fanout=self.n)
 
     def stats(self) -> dict:
-        """{verb: {calls, msgs, bytes[, modeled_s]}} accumulated since
-        reset (``modeled_s`` only when a profile is bound)."""
-        return {k: dict(v) for k, v in self._stats.items()}
+        """{verb: {calls, msgs, bytes, peak_outstanding, queue_hist
+        [, modeled_s]}} accumulated since reset (``modeled_s`` only when a
+        profile is bound; ``queue_hist`` maps power-of-two depth buckets
+        like "0"/"1-1"/"2-3" to call counts)."""
+        out = {}
+        for k, v in self._stats.items():
+            d = dict(v)
+            if "queue_hist" in d:
+                d["queue_hist"] = dict(d["queue_hist"])
+            out[k] = d
+        return out
 
     def reset_stats(self):
         self._stats = {}
@@ -168,7 +207,8 @@ class Transport:
     # ---------------------------------------------------------- router ---
 
     def route(self, fields, dest=None, *, cap: Optional[int] = None,
-              chunks: int = 1, plan=None, mask=None):
+              chunks: int = 1, plan=None, mask=None,
+              window: Optional[int] = None):
         """Radix-route a request pytree into (n, cap) buffers and exchange
         them with the peers (see ``repro.fabric.route``).
 
@@ -180,28 +220,39 @@ class Transport:
 
         plan=: reuse a :class:`~repro.fabric.router.RoutePlan` from
         :meth:`plan_route` (skips the rank-in-bucket pass); mask= unsends
-        requests from a reused plan without re-ranking."""
+        requests from a reused plan without re-ranking.
+
+        window=: doorbell-batching cap — max in-flight peer buffers when
+        this route is priced under contention (defaults to the plan's;
+        0/None = post everything at once).  The exchanged bits are
+        identical at any window: it feeds the outstanding-request
+        counters and the event trace, and ``repro.fabric.sim`` prices it
+        (docs/netsim.md "netsim v2")."""
         n = self.n
         if plan is not None:
             cap = plan.cap
+            if window is None:
+                window = plan.window
         elif cap is None:
             raise ValueError("route needs cap= (or a plan=)")
         nbytes = n * cap * _router.WORD_BYTES * _router.packed_row_words(
             fields)
-        self._count("route", n * chunks, nbytes)
+        self._count("route", n * chunks, nbytes,
+                    window=int(window or 0), collective=True)
         res = _router.route(fields, dest, n=n, cap=cap, chunks=chunks,
                             exchange=self._make_exchange(cap, chunks),
-                            plan=plan, mask=mask)
+                            plan=plan, mask=mask, window=window)
         self._rec_fence("route-roundtrip")
         return res
 
-    def plan_route(self, dest, *, cap: int):
+    def plan_route(self, dest, *, cap: int, window: int = 0):
         """Precompute the slot assignment for ``dest`` (one sort-free
         rank-in-bucket pass) for reuse across routed rounds.  Local
         compute, not wire traffic — counted in ``plan_builds``, not in
-        ``stats()``."""
+        ``stats()``.  ``window`` declares the plan's doorbell-batching cap
+        (see :class:`~repro.fabric.router.RoutePlan`)."""
         self.plan_builds += 1
-        return _router.plan_route(dest, n=self.n, cap=cap)
+        return _router.plan_route(dest, n=self.n, cap=cap, window=window)
 
     # ------------------------------------------------ substrate hooks ----
 
@@ -252,17 +303,20 @@ class LocalTransport(Transport):
         return jnp.int32(0)
 
     def psum(self, x):
-        self._count("psum", 1, x.size * x.dtype.itemsize)
+        self._count("psum", 1, x.size * x.dtype.itemsize,
+                    collective=True)
         self._rec_fence("psum")
         return x
 
     def all_gather(self, x):
-        self._count("all_gather", 1, x.size * x.dtype.itemsize)
+        self._count("all_gather", 1, x.size * x.dtype.itemsize,
+                    collective=True)
         self._rec_fence("all_gather")
         return x
 
     def exchange(self, v, chunks: int = 1):
-        self._count("exchange", chunks, v.size * v.dtype.itemsize)
+        self._count("exchange", chunks, v.size * v.dtype.itemsize,
+                    collective=True)
         self._rec_fence("exchange")
         return v
 
@@ -271,8 +325,9 @@ class MeshTransport(Transport):
     """NAM deployment over a mesh axis: bodies run under shard_map, routed
     buffers travel on the paired (chunkable) all_to_all."""
 
-    def __init__(self, mesh, axis: str, profile=None):
-        super().__init__(profile=profile)
+    def __init__(self, mesh, axis: str, profile=None, recorder=None,
+                 tracer=None):
+        super().__init__(profile=profile, recorder=recorder, tracer=tracer)
         self.mesh = mesh
         self.axis = axis
 
@@ -299,19 +354,20 @@ class MeshTransport(Transport):
         return jax.lax.axis_index(self.axis)
 
     def psum(self, x):
-        self._count("psum", self.n, x.size * x.dtype.itemsize)
+        self._count("psum", self.n, x.size * x.dtype.itemsize,
+                    collective=True)
         self._rec_fence("psum")
         return jax.lax.psum(x, self.axis)
 
     def all_gather(self, x):
         self._count("all_gather", self.n,
-                    self.n * x.size * x.dtype.itemsize)
+                    self.n * x.size * x.dtype.itemsize, collective=True)
         self._rec_fence("all_gather")
         return jax.lax.all_gather(x, self.axis, tiled=True)
 
     def exchange(self, v, chunks: int = 1):
         cap = v.shape[0] // self.n
         self._count("exchange", self.n * chunks,
-                    v.size * v.dtype.itemsize)
+                    v.size * v.dtype.itemsize, collective=True)
         self._rec_fence("exchange")
         return _router.chunked_all_to_all(v, self.axis, self.n, cap, chunks)

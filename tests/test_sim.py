@@ -1,0 +1,310 @@
+"""netsim v2 — the discrete-event contention simulator (ISSUE 7).
+
+Contracts guarded here:
+
+  * **anchored to the analytic model** — a lone point call simulates to
+    exactly ``profile.t_call``; a single agent at window=1 replays any
+    point trace in exactly the analytic serial sum (the uncontended
+    limit, load->0); as window->inf throughput converges to the binding
+    resource's analytic rate;
+  * **work conservation** — simulated makespan >= the analytic lower
+    bound (per-port byte work, per-NIC message work, longest flow) for
+    arbitrary traces under both link schedulers (hypothesis property);
+  * **determinism** — identical trace + seed => bit-identical simulated
+    timeline;
+  * **contention physics** — fair share splits a port exactly,
+    ``contended_profile`` derates bandwidth to bw/(1+load), WRITE
+    out-rates SEND at saturation, the window sweep bends;
+  * **planning under load** — ``Planner(load=)``/``db.explain(load=)``
+    flip the join argmin on a fixed RDMA profile as load rises (the
+    fig10 crossover);
+  * **trace plumbing** — ``Transport(tracer=)`` records every counted
+    verb, ``RoutePlan.window`` survives the pytree round trip, the new
+    outstanding/queue-depth counters land in ``stats()``, and the
+    windowed route stays clean under ``repro.fabric.check``.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.db import Database
+from repro.db.planner import Planner
+from repro.fabric import LocalTransport, netsim, router, sim
+
+EDR = netsim.get_profile("rdma_edr")
+ALL_PROFILES = sorted(netsim.PROFILES)
+
+
+# ------------------------------------------------- analytic anchoring ----
+
+@pytest.mark.parametrize("pname", ALL_PROFILES)
+def test_single_call_is_exactly_t_call(pname):
+    p = netsim.get_profile(pname)
+    ev = sim.SimEvent(seq=0, verb="write", msgs=4, nbytes=65536,
+                      src=0, dst=1)
+    res = sim.FabricSim(p, nodes=2).run([ev])
+    assert res.makespan == pytest.approx(p.t_call(4, 65536), rel=1e-12)
+    assert res.latency[0] == res.makespan
+
+
+@pytest.mark.parametrize("pname", ALL_PROFILES)
+def test_serial_window1_equals_analytic_sum(pname):
+    """The uncontended limit: one agent, one call in flight — the
+    simulator IS the analytic model, summed."""
+    p = netsim.get_profile(pname)
+    trace = [sim.SimEvent(seq=i, verb="write", msgs=1 + i % 3,
+                          nbytes=1024 * (1 + i % 5), agent="a",
+                          src=0, dst=1) for i in range(40)]
+    res = sim.FabricSim(p, nodes=2, window=1).run(trace)
+    assert res.makespan == pytest.approx(sim.analytic_time(trace, p),
+                                         rel=1e-12)
+
+
+def test_window_inf_converges_to_binding_resource_rate():
+    """As window -> inf a point stream saturates at the analytic rate of
+    the binding resource (the wire for 4KB WRITEs on EDR)."""
+    curve = sim.window_sweep(EDR, verb="write", op_bytes=4096, n_ops=512,
+                             windows=(64, 128))
+    bound = 1.0 / max(EDR.per_message_s, 4096 / EDR.bandwidth)
+    assert curve[128] == pytest.approx(bound, rel=0.05)
+    assert curve[128] >= curve[64] * 0.999
+
+
+# ------------------------------------------------- work conservation ----
+
+def test_makespan_never_beats_lower_bound_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=30, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**31 - 1), tenants=st.integers(1, 4),
+               ops=st.integers(1, 6), window=st.integers(0, 4),
+               nodes=st.integers(2, 5),
+               op_bytes=st.integers(1, 1 << 16),
+               scheduler=st.sampled_from(["fair", "fcfs"]),
+               verb=st.sampled_from(["write", "send", "read"]))
+    def prop(seed, tenants, ops, window, nodes, op_bytes, scheduler, verb):
+        trace = sim.synthetic_load(tenants, ops_per_tenant=ops,
+                                   op_bytes=op_bytes, verb=verb,
+                                   spread_s=1e-5, seed=seed)
+        res = sim.FabricSim(EDR, nodes=nodes, window=window,
+                            scheduler=scheduler).run(trace)
+        lb = sim.analytic_lower_bound(trace, EDR, nodes=nodes)
+        assert res.makespan >= lb * (1 - 1e-9)
+        assert len(res.completions) == len(trace)
+
+    prop()
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_makespan_never_beats_lower_bound_seeded(seed):
+    """Stdlib fallback for the hypothesis property above — always runs."""
+    import random
+    rng = random.Random(seed)
+    trace = sim.synthetic_load(rng.randint(1, 4),
+                               ops_per_tenant=rng.randint(1, 6),
+                               op_bytes=rng.randint(1, 1 << 16),
+                               verb=rng.choice(["write", "send", "read"]),
+                               spread_s=1e-5, seed=seed)
+    nodes = rng.randint(2, 5)
+    for scheduler in ("fair", "fcfs"):
+        res = sim.FabricSim(EDR, nodes=nodes, window=rng.randint(0, 4),
+                            scheduler=scheduler).run(trace)
+        lb = sim.analytic_lower_bound(trace, EDR, nodes=nodes)
+        assert res.makespan >= lb * (1 - 1e-9)
+        assert len(res.completions) == len(trace)
+
+
+def test_collective_replay_respects_lower_bound():
+    trace = [sim.SimEvent(seq=i, verb="route", msgs=16, nbytes=1 << 20,
+                          dst=sim.ALL) for i in range(3)]
+    res = sim.replay(trace, EDR, nodes=4)
+    assert res.makespan >= sim.analytic_lower_bound(trace, EDR, nodes=4)
+    # a collective occupies every node's ports: all 4 tx ports billed
+    assert sum(1 for k in res.port_bytes if k.startswith("tx")) == 4
+
+
+# ------------------------------------------------------ determinism ----
+
+def test_identical_trace_and_seed_bit_identical_timeline():
+    mk = lambda: sim.synthetic_load(4, ops_per_tenant=8, op_bytes=4096,
+                                    spread_s=1e-4, seed=11)
+    r1 = sim.FabricSim(EDR, nodes=4, window=2).run(mk())
+    r2 = sim.FabricSim(EDR, nodes=4, window=2).run(mk())
+    assert r1.timeline == r2.timeline           # bit-identical, not approx
+    assert r1.completions == r2.completions
+    other = sim.synthetic_load(4, ops_per_tenant=8, op_bytes=4096,
+                               spread_s=1e-4, seed=12)
+    assert other != mk()                        # the seed is the only RNG
+
+
+# ------------------------------------------------- contention physics ----
+
+def test_fair_share_splits_the_ingress_port_exactly():
+    """Two equal flows into one ingress: each runs at bw/2, so the wire
+    stage takes exactly 2B/bw — fluid processor sharing."""
+    B = 1 << 20
+    trace = [sim.SimEvent(seq=0, verb="write", msgs=1, nbytes=B,
+                          agent="a", src=0, dst=2),
+             sim.SimEvent(seq=1, verb="write", msgs=1, nbytes=B,
+                          agent="b", src=1, dst=2)]
+    res = sim.FabricSim(EDR, nodes=3).run(trace)
+    expect = EDR.setup_s + EDR.per_message_s + 2 * B / EDR.bandwidth
+    assert res.makespan == pytest.approx(expect, rel=1e-9)
+
+
+def test_fcfs_serializes_where_fair_shares():
+    """Same two flows under FCFS: the first-arrived transfer gets the
+    full port, so it completes a full wire-time earlier; the total is
+    unchanged (both schedulers are work-conserving)."""
+    B = 1 << 20
+    trace = [sim.SimEvent(seq=0, verb="write", msgs=1, nbytes=B,
+                          agent="a", src=0, dst=2),
+             sim.SimEvent(seq=1, verb="write", msgs=1, nbytes=B,
+                          agent="b", src=1, dst=2)]
+    fair = sim.FabricSim(EDR, nodes=3, scheduler="fair").run(trace)
+    fcfs = sim.FabricSim(EDR, nodes=3, scheduler="fcfs").run(trace)
+    assert fcfs.makespan == pytest.approx(fair.makespan, rel=1e-9)
+    assert fcfs.completions[0] < fair.completions[0] * (1 - 1e-6)
+
+
+def test_window_sweep_saturates_and_write_beats_send():
+    write = sim.window_sweep(EDR, verb="write", op_bytes=4096, n_ops=256)
+    send = sim.window_sweep(EDR, verb="send", op_bytes=4096, n_ops=256)
+    assert max(write.values()) / write[1] > 1.5      # the window pays
+    assert write[64] / write[16] < 1.2               # ... then saturates
+    assert max(write.values()) > 1.25 * max(send.values())
+
+
+def test_queue_depth_histogram_counts_waiting_calls():
+    trace = [sim.SimEvent(seq=i, verb="write", msgs=1, nbytes=4096,
+                          agent="a", src=0, dst=1) for i in range(8)]
+    res = sim.FabricSim(EDR, nodes=2, window=1).run(trace)
+    # 8 calls arrive at t=0 with one admitted: depths 0..7 each seen once
+    assert res.queue_depth_hist == {d: 1 for d in range(8)}
+    assert res.peak_outstanding == {"write": 1}
+
+
+@pytest.mark.parametrize("load", [0, 8, 64])
+def test_contended_profile_measures_fair_share_law(load):
+    cp = sim.contended_profile(EDR, load)
+    if load == 0:
+        assert cp is EDR                      # identity, not a copy
+    else:
+        assert cp.bandwidth == pytest.approx(EDR.bandwidth / (1 + load),
+                                             rel=1e-9)
+        assert cp.per_message_s == EDR.per_message_s   # NICs are private
+        assert cp.name == f"rdma_edr+load{load}"
+
+
+def test_invalid_scheduler_rejected():
+    with pytest.raises(ValueError, match="scheduler"):
+        sim.FabricSim(EDR, scheduler="lifo")
+
+
+# ------------------------------------------------- planning under load ----
+
+def test_planner_argmin_flips_with_load_on_fixed_profile():
+    """The fig10 acceptance: at a FIXED RDMA profile the join argmin is a
+    function of load — rrj (ships everything through the fused pass) when
+    idle, ghj_bloom (ships the reduced fraction) under contention."""
+    nr = ns = int(8e6)
+    chosen = {L: Planner.chosen(Planner(net="rdma_edr", load=L)
+                                .join_alternatives(nr, ns, sel=0.25))
+              for L in (0, 8, 64)}
+    assert chosen[0] == "rrj"
+    assert chosen[8] == "rrj"
+    assert chosen[64] == "ghj_bloom"
+
+
+def test_planner_load_zero_is_isolated_argmin():
+    nr = ns = int(8e6)
+    a0 = Planner(net="rdma_edr").join_alternatives(nr, ns, sel=0.5)
+    al = Planner(net="rdma_edr", load=0).join_alternatives(nr, ns, sel=0.5)
+    assert [(a.name, a.cost_s) for a in a0] == \
+        [(a.name, a.cost_s) for a in al]
+
+
+def test_database_explain_load_flip_and_inputs():
+    db = Database(net="rdma_edr")
+    keys = jnp.arange(1, 1025, dtype=jnp.uint32)
+    db.load_table("R", keys, keys)
+    db.load_table("S", keys, keys)
+    q = db.scan("R").join(db.scan("S").filter(sel=0.25)).aggregate()
+    e0 = db.explain(q)
+    e64 = db.explain(q, load=64)
+    assert e0.inputs["load"] == 0 and e64.inputs["load"] == 64
+    assert e0.chosen == "rrj"
+    assert e64.chosen == "ghj_bloom"
+    # db state untouched by the load-sweep planner
+    assert db.planner.load == 0
+
+
+# ----------------------------------------------------- trace plumbing ----
+
+def test_tracer_records_every_counted_verb_and_replays():
+    tracer = sim.EventTracer()
+    tp = LocalTransport(tracer=tracer)
+    words = jnp.zeros((64,), jnp.uint32)
+    idx = jnp.arange(8, dtype=jnp.int32)
+    with tracer.agent("w0"):
+        tp.write(words, idx, jnp.ones((8,), jnp.uint32))
+    tp.read(words, idx)
+    tp.route({"k": words[:8]}, jnp.zeros((8,), jnp.int32), cap=8, window=4)
+    verbs = [e.verb for e in tracer.events]
+    assert verbs == ["write", "read", "route"]
+    assert tracer.events[0].agent == "w0"
+    assert tracer.events[2].window == 4
+    calls = sum(v["calls"] for v in tp.stats().values())
+    assert calls == len(tracer.events)          # one event per counted call
+    res = sim.replay(tracer.events, "rdma_edr", nodes=4, window=2)
+    assert res.makespan >= sim.analytic_lower_bound(tracer.events,
+                                                    "rdma_edr", nodes=4)
+
+
+def test_transport_counters_peak_outstanding_and_queue_hist():
+    tp = LocalTransport()
+    dest = jnp.zeros((64,), jnp.int32)
+    plan = tp.plan_route(dest, cap=64, window=4)
+    tp.route({"k": jnp.arange(64, dtype=jnp.uint32)}, plan=plan, chunks=8)
+    s = tp.stats()["route"]
+    assert s["peak_outstanding"] == 4           # capped by the window
+    assert s["queue_hist"] == {"4-7": 1}        # 8 msgs - 4 in flight
+    tp.route({"k": jnp.arange(64, dtype=jnp.uint32)}, dest, cap=64)
+    s = tp.stats()["route"]
+    assert s["peak_outstanding"] == 4           # high-water mark sticks
+    assert s["queue_hist"] == {"4-7": 1, "0": 1}
+
+
+def test_routeplan_window_survives_pytree_and_validates():
+    import jax
+    plan = router.plan_route(jnp.zeros((8,), jnp.int32), n=1, cap=8,
+                             window=5)
+    assert plan.window == 5
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    assert jax.tree_util.tree_unflatten(treedef, leaves).window == 5
+    with pytest.raises(ValueError, match="window"):
+        router.plan_route(jnp.zeros((8,), jnp.int32), n=1, cap=8,
+                          window=-2)
+    # route() inherits the plan's window; explicit window overrides
+    tp = LocalTransport()
+    tp.route({"k": jnp.zeros((8,), jnp.uint32)}, plan=plan)
+    assert tp.stats()["route"]["peak_outstanding"] == 1   # 1 msg, w=5
+
+
+def test_check_sim_suite_records_clean():
+    from repro.fabric import check
+    reports = check.run_suite("sim")
+    assert len(reports) == 3
+    assert all(r.ok for r in reports), [r.violations for r in reports]
+
+
+def test_database_stats_delta_survives_new_counters():
+    db = Database(net="rdma_edr")
+    keys = jnp.arange(1, 257, dtype=jnp.uint32)
+    db.load_table("R", keys, keys)
+    db.load_table("S", keys, keys)
+    q = db.scan("R").join(db.scan("S").filter(sel=0.5)).aggregate()
+    r = db.execute(q)
+    assert r.stats                               # delta computed, no crash
+    for verb, s in r.stats.items():
+        assert isinstance(s.get("queue_hist", {}), dict)

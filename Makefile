@@ -26,6 +26,7 @@ bench-smoke:     ## timed fig2+fig10 pass on CPU: measured_s schema check only
 	assert not d['check']['violations'], d['check']; \
 	print('bench-smoke ok: fig10', len(d['measured_s']), 'measured_s entries,', \
 	d['check']['rules_run'], 'check rules clean')"
+	PYTHONPATH=src python -m repro.fabric.check --suite async -q
 
 check:           ## fabriccheck: jaxpr lint + one-sided race detector
 	PYTHONPATH=src python -m repro.fabric.check --figure all -q

@@ -19,16 +19,20 @@ import jax.numpy as jnp
 
 from benchmarks import timing
 from repro.db import JOIN_VARIANTS, Database
-from repro.fabric import MeshTransport, netsim
+from repro.fabric import MeshTransport, netsim, sim
 
 DEFAULT_PROFILES = ("rdma_fdr4x",)       # the paper's measured cluster
+ROUTE_CHUNKS = 4                         # double-buffer depth for the A/B
 
 
-def _shuffle_route_bench(transport, n_rows: int = 1 << 20):
+def _shuffle_route_bench(transport, n_rows: int = 1 << 20, *,
+                         overlap: bool = False, chunks: int = 1):
     """The shuffle microbench: ONE routed exchange of a (keys, vals)
     relation — the exact motion `_route_by_key` performs inside every
     distributed join, isolated from the local join work.  This is the
-    packed-wire + sort-free hot path the PR's speedup acceptance pins."""
+    packed-wire + sort-free hot path the PR's speedup acceptance pins;
+    ``overlap=True`` takes the double-buffered path (chunk k+1 packs
+    while chunk k is on the wire, docs/fabric.md)."""
     key = jax.random.PRNGKey(0)
     ks = jax.random.randint(key, (n_rows,), 0, 1 << 30).astype(jnp.uint32)
     vs = jnp.ones((n_rows,), jnp.uint32)
@@ -37,12 +41,38 @@ def _shuffle_route_bench(transport, n_rows: int = 1 << 20):
 
     def body(k, v):
         dest = (k % jnp.uint32(n)).astype(jnp.int32)
-        res = transport.route({"k": k, "v": v}, dest, cap=cap)
+        res = transport.route({"k": k, "v": v}, dest, cap=cap,
+                              chunks=chunks, overlap=overlap)
         return res.fields["k"], res.fields["v"], res.dropped
 
     f = jax.jit(lambda k, v: transport.run(
         body, (k, v), out_reps=(False, False, True)))
     return timing.device_time_s(f, ks, vs)
+
+
+def _route_replay_pricing(profile_name: str, n: int, cap: int,
+                          chunks: int, row_words: int = 3):
+    """Price the double-buffered route *schedule* on the netsim v2
+    simulator: per chunk, a pack (compute) event then the chunk's wire
+    event, with the pack sized to the chunk's wire time (the balanced
+    point where double-buffering can hide it all).  ``window=1`` replays
+    the synchronous schedule and lands exactly on the analytic serial
+    sum; ``window=2`` is the double-buffered one — the gap is the modeled
+    value of the overlap on this profile (docs/netsim.md)."""
+    p = netsim.get_profile(profile_name)
+    nbytes = n * cap * 4 * row_words / chunks
+    wire_s = p.t_call(n, nbytes)
+    tr = sim.EventTracer()
+    for _ in range(chunks):
+        tr.emit_compute(wire_s)
+        tr.emit("route", n, nbytes, collective=True)
+    serial = sim.analytic_time(tr.events, p)
+    nodes = max(2, n)
+    sync = sim.replay(tr.events, p, nodes=nodes, window=1).makespan
+    over = sim.replay(tr.events, p, nodes=nodes, window=2).makespan
+    return {"profile": p.name, "chunks": chunks, "serial_s": serial,
+            "window1_s": sync, "window2_s": over,
+            "overlap_speedup": serial / over if over else 0.0}
 
 
 def _rel(sel: float, n: int = 1 << 20):
@@ -107,14 +137,33 @@ def run(profiles=None, timed=False):
         # acceptance: the join-variant argmin must differ on >= 2 profiles
         assert any(len(set(w.values())) > 1 for w in crossover.values()), \
             f"no join-variant crossover across {profiles}"
-    # the shuffle microbench: the routed exchange alone (PR acceptance:
-    # packed + sort-free route >= 1.3x over the per-leaf argsort router);
-    # a FRESH transport, so the figure's modeled_wire/fabric counters keep
-    # pricing only the join queries' traffic
-    route_s = _shuffle_route_bench(MeshTransport(mesh, "data"))
+    # the shuffle microbench: the routed exchange alone, A/B'd on the
+    # async overlap axis (PR acceptance: overlap_on strictly beats
+    # overlap_off).  "on" is the double-buffered inversion-gather route
+    # (chunk k+1 packs while chunk k is on the wire), "off" the
+    # synchronous monolithic route.  FRESH transports each, so the
+    # figure's modeled_wire/fabric counters keep pricing only the join
+    # queries' traffic
+    route_s = _shuffle_route_bench(MeshTransport(mesh, "data"),
+                                   overlap=True, chunks=ROUTE_CHUNKS)
+    route_off_s = _shuffle_route_bench(MeshTransport(mesh, "data"))
     rows.append(("fig8a/shuffle_route_1M", route_s * 1e6,
-                 "one_packed_route_2fields"))
+                 f"overlap_on_chunks{ROUTE_CHUNKS}"))
+    rows.append(("fig8a/shuffle_route_1M_overlap_off", route_off_s * 1e6,
+                 f"{route_off_s / route_s:.2f}x_slower_sync"))
     measured["fig8a/shuffle_route_1M"] = route_s
+    measured["fig8a/shuffle_route_1M_overlap_off"] = route_off_s
+    extras_overlap = {
+        "on_s": route_s, "off_s": route_off_s,
+        "chunks": ROUTE_CHUNKS,
+        "replay": _route_replay_pricing(
+            profiles[0], max(2, mesh.size), 2 * n // max(2, mesh.size),
+            ROUTE_CHUNKS),
+    }
+    if timed:
+        assert route_s < route_off_s, (
+            f"overlap_on ({route_s * 1e3:.2f} ms) not faster than "
+            f"overlap_off ({route_off_s * 1e3:.2f} ms)")
     stats = db.fabric_stats()
     modeled = {p: netsim.get_profile(p).modeled_time(stats)
                for p in profiles}
@@ -122,6 +171,7 @@ def run(profiles=None, timed=False):
         rows.append((f"fig8a/modeled_wire_{pname}", s * 1e6,
                      "all_counted_traffic"))
     extras = {"fabric": stats, "modeled_wire_s": modeled,
+              "overlap": extras_overlap,
               "crossover": {str(s): w for s, w in crossover.items()}}
     if timed:
         extras["measured_s"] = measured

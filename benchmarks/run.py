@@ -13,7 +13,9 @@ so the perf trajectory is comparable across PRs.
 warmup + median-of-k harness (``benchmarks/timing.py``) and adds a
 ``measured_s`` dict ({row name: seconds}) to every figure's JSON, next to
 the modeled numbers — the repo's falsifiable wall-clock baseline.  The
-harness errors if a figure forgets to emit it.
+harness errors if a figure forgets to emit it.  Fig 8a additionally emits
+an ``overlap`` block (double-buffered route on vs off, plus the sim's
+replay pricing of the schedule) and asserts on < off when timed.
 
 ``--check`` additionally runs ``fabriccheck`` (the jaxpr lint + one-sided
 race detector, ``repro.fabric.check``) over each figure's gating suites

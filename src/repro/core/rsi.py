@@ -218,6 +218,145 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
                     "bitvec": bitvec}
 
 
+def commit_pipelined(store, waves, *, transport=None, priority=None,
+                     chunks: int = 1, region_ns: str = ""):
+    """Commit K *dependent* transaction waves with wave i's install round
+    trip overlapping wave i+1's prepare round trip — the paper's motivation
+    for one-sided verbs: the client issues the install WRITEs unsignaled
+    and immediately posts the next wave's prepare, waiting on the install
+    completion only when it must apply the results.
+
+    Semantically identical to K sequential :func:`commit` calls (same CAS
+    arbitration, same store mutations, same counters per wave — guarded by
+    ``tests/test_async.py``): the prepare route of wave i+1 reads only the
+    txn batch, never the store, so hoisting it over wave i's in-flight
+    install changes the schedule, not the bits.  The ordering that *must*
+    hold — wave i's lock-releasing words WRITE happens-before wave i+1's
+    CAS — is carried by explicit ``Completion.wait()`` fences: install
+    ``wait()`` (a route-roundtrip fence) precedes the next prepare
+    ``wait()``, so the race detector records the pipeline clean; drop
+    either wait and ``fabric.check`` names the racing verb pair (seeded
+    fixtures in ``tests/test_check.py``).
+
+    waves: list of :class:`TxnBatch` (per-wave T may differ).
+    priority: optional list of (T,) int32, one per wave.
+    Returns (txn_ok list — (T,) bool per wave — and the new store).
+    """
+    if transport is None:
+        transport = LocalTransport()
+    K = len(waves)
+    if K == 0:
+        return [], store
+    if priority is None:
+        priority = [jnp.arange(w.write_recs.shape[0], dtype=jnp.int32)
+                    for w in waves]
+    n = transport.n
+    recorder = getattr(transport, "recorder", None)
+
+    def body(words, payload, cids, bitvec, *flat):
+        wv = [flat[5 * i:5 * (i + 1)] for i in range(K)]
+        me = transport.shard_index()
+        r_local = words.shape[0]
+        bv_local = bitvec.shape[0]
+
+        def issue_prepare(wrecs, rcids, prio):
+            """Post wave's prepare on the wire (async — no fence until
+            the caller waits).  Touches only the txn batch."""
+            Tl, W = wrecs.shape
+            dest = jnp.where(wrecs >= 0, wrecs // r_local, n).reshape(-1)
+            req = {"rec": wrecs.reshape(-1),
+                   "exp": (rcids & CID_MASK).reshape(-1),
+                   "prio": jnp.repeat(prio, W),
+                   "slot": jnp.arange(Tl * W, dtype=jnp.int32)}
+            plan = transport.plan_route(dest, cap=Tl * W)
+            return plan, transport.route_async(req, plan=plan, chunks=chunks)
+
+        outs = []
+        prep = issue_prepare(wv[0][0], wv[0][1], wv[0][4])
+        for i in range(K):
+            wrecs, rcids, npay, cid, prio = wv[i]
+            Tl, W = wrecs.shape
+            if recorder is not None:
+                recorder.begin_wave(f"{region_ns}commit[{i}]")
+            plan, prep_c = prep
+            res = prep_c.wait()          # prepare round-trip fence, wave i
+            r, rvalid = res.fields, res.valid
+            lrec = jnp.where(rvalid > 0, r["rec"] % r_local, -1)
+            ok, words = transport.cas(words, lrec, r["exp"],
+                                      LOCK_BIT | r["exp"],
+                                      priority=r["prio"],
+                                      region=region_ns + "words")
+            grant = transport.exchange(
+                ok.astype(jnp.uint32)).astype(jnp.int32)
+            granted = jnp.zeros((Tl * W,), jnp.int32).at[
+                res.sent["slot"]].add(grant * res.sent_valid)
+            gmat = granted.reshape(Tl, W) > 0
+            used = wrecs >= 0
+            txn_ok = jnp.all(gmat | ~used, axis=1) & jnp.any(used, axis=1)
+            outs.append(txn_ok)
+            commit_req = jnp.repeat(txn_ok, W) & (granted > 0)
+            release_req = (granted > 0) & ~commit_req
+            inst = {"rec": wrecs.reshape(-1),
+                    "val": jnp.where(commit_req, jnp.repeat(
+                        cid & CID_MASK, W), (rcids & CID_MASK).reshape(-1)),
+                    "npay": npay.reshape(Tl * W, -1),
+                    "do_pay": commit_req.astype(jnp.int32)}
+            act = commit_req | release_req
+            inst_c = transport.route_async(inst, plan=plan, mask=act,
+                                           chunks=chunks)
+            if i + 1 < K:
+                # THE overlap: wave i+1's prepare goes on the wire while
+                # wave i's install is still in flight.
+                prep = issue_prepare(wv[i + 1][0], wv[i + 1][1],
+                                     wv[i + 1][4])
+            res2 = inst_c.wait()         # install round-trip fence, wave i
+            r2, v2 = res2.fields, res2.valid
+            lrec2 = jnp.where(v2 > 0, r2["rec"] % r_local, -1)
+            words = transport.write(words, lrec2, r2["val"],
+                                    region=region_ns + "words")
+            oob = payload.shape[0]
+            pay_idx = jnp.where((r2["do_pay"] > 0) & (v2 > 0), lrec2, -1)
+            idx_pay = jnp.where(pay_idx >= 0, pay_idx, oob)
+            if payload.shape[1] > 1:
+                shifted_pay = jnp.concatenate(
+                    [payload[:, :1], payload[:, :-1]], axis=1)
+                shifted_cid = jnp.concatenate(
+                    [cids[:, :1], cids[:, :-1]], axis=1)
+                has_commit = jnp.zeros((oob,), bool).at[idx_pay].set(
+                    True, mode="drop")
+                payload = jnp.where(has_commit[:, None, None], shifted_pay,
+                                    payload)
+                cids = jnp.where(has_commit[:, None], shifted_cid, cids)
+            payload = payload.at[idx_pay, 0].set(r2["npay"], mode="drop")
+            cids = cids.at[idx_pay, 0].set(r2["val"], mode="drop")
+            transport.record_access("WRITE", region_ns + "payload",
+                                    pay_idx, region_len=oob)
+            transport.record_access("WRITE", region_ns + "cids", pay_idx,
+                                    region_len=oob)
+            cbit = cid.astype(jnp.int32) - me * bv_local
+            cbit = jnp.where((cbit >= 0) & (cbit < bv_local), cbit,
+                             bv_local)
+            bitvec = bitvec.at[cbit].set(True, mode="drop")
+            transport.record_access(
+                "WRITE", region_ns + "bitvec",
+                jnp.where(cbit < bv_local, cbit, -1), region_len=bv_local)
+        return tuple(outs) + (words, payload, cids, bitvec)
+
+    flat_args = []
+    for w, p in zip(waves, priority):
+        flat_args += [w.write_recs, w.read_cids, w.new_payload, w.cid, p]
+    out = transport.run(
+        body,
+        (store["words"], store["payload"], store["cids"], store["bitvec"],
+         *flat_args),
+        out_reps=(False,) * (K + 4))
+    if recorder is not None:
+        recorder.fence("commit-complete")
+    txn_ok, (words, payload, cids, bitvec) = list(out[:K]), out[K:]
+    return txn_ok, {"words": words, "payload": payload, "cids": cids,
+                    "bitvec": bitvec}
+
+
 def read_snapshot(store, recs, rid, *, transport=None, region_ns: str = ""):
     """Read records at snapshot `rid`: newest version with CID <= rid.
     Returns (payload (..., m), cid, ok — False if no visible version).

@@ -182,23 +182,8 @@ class Database:
         if len(names) != 1:
             raise ValueError(f"one table per commit wave, got {names}")
         t = self.table(names.pop())
-        writes = [s.writes() for s in sessions]
+        txns, cids = self._pack_txns(t, sessions)
         T = len(sessions)
-        W = max(r.shape[0] for r, _, _ in writes)
-        m = t.schema.payload_words
-        recs = np.full((T, W), -1, np.int32)
-        pay = np.zeros((T, W, m), np.uint32)
-        rcids = np.zeros((T, W), np.uint32)
-        for i, (r, p, rc) in enumerate(writes):
-            if r.shape[0]:
-                recs[i, :r.shape[0]] = r
-                pay[i, :r.shape[0]] = p
-                rcids[i, :r.shape[0]] = rc
-        cids = self.claim_cids(T)
-        txns = rsi.TxnBatch(write_recs=jnp.asarray(recs),
-                            read_cids=jnp.asarray(rcids),
-                            new_payload=jnp.asarray(pay),
-                            cid=jnp.asarray(cids))
         ok, t.store = self._jit_commit(isolation, chunks,
                                        f"{t.schema.name}/")(
             t.store, txns,
@@ -218,6 +203,90 @@ class Database:
             s.committed = bool(committed)
             s.cid = int(cid)
         return np.asarray([s.committed for s in wave], bool)
+
+    def _pack_txns(self, t: Table, sessions: List[Session]):
+        """Batch one wave of writer sessions into a TxnBatch (T fixed W
+        write slots, record -1 = unused) and claim its commit timestamps."""
+        writes = [s.writes() for s in sessions]
+        T = len(sessions)
+        W = max(r.shape[0] for r, _, _ in writes)
+        m = t.schema.payload_words
+        recs = np.full((T, W), -1, np.int32)
+        pay = np.zeros((T, W, m), np.uint32)
+        rcids = np.zeros((T, W), np.uint32)
+        for i, (r, p, rc) in enumerate(writes):
+            if r.shape[0]:
+                recs[i, :r.shape[0]] = r
+                pay[i, :r.shape[0]] = p
+                rcids[i, :r.shape[0]] = rc
+        cids = self.claim_cids(T)
+        txns = rsi.TxnBatch(write_recs=jnp.asarray(recs),
+                            read_cids=jnp.asarray(rcids),
+                            new_payload=jnp.asarray(pay),
+                            cid=jnp.asarray(cids))
+        return txns, cids
+
+    def commit_pipelined(self, waves: List[List[Session]], *,
+                         chunks: int = 1) -> List[np.ndarray]:
+        """Commit K *dependent* session waves with wave i's install round
+        trip overlapping wave i+1's prepare round trip
+        (:func:`repro.core.rsi.commit_pipelined` — RSI only).  Semantically
+        identical to K sequential :meth:`commit` calls on the same waves;
+        the overlap changes the schedule, never the outcome.  Returns the
+        per-wave committed masks."""
+        waves = [list(w) for w in waves]
+        writer_meta = []        # (sessions, cids) per writer wave, in order
+        txns_list = []
+        table = None
+        for w in waves:
+            if any(s.isolation != "rsi" for s in w):
+                raise ValueError("commit_pipelined is RSI-only")
+            for s in w:
+                if s.table_name is None:
+                    s.committed = True
+            writers = [s for s in w if s.table_name is not None]
+            if not writers:
+                continue
+            names = {s.table_name for s in writers}
+            if len(names) != 1:
+                raise ValueError(f"one table per commit wave, got {names}")
+            t = self.table(names.pop())
+            if table is None:
+                table = t
+            elif t is not table:
+                raise ValueError("one table per pipelined commit")
+            txns, cids = self._pack_txns(t, writers)
+            txns_list.append(txns)
+            writer_meta.append((writers, cids))
+        if txns_list:
+            oks, table.store = self._jit_commit_pipelined(
+                chunks, f"{table.schema.name}/", len(txns_list))(
+                table.store, txns_list)
+            for (sessions, cids), ok in zip(writer_meta, oks):
+                if self.transport.n > 1:
+                    # msg 3 completion for globally contiguous cids, as in
+                    # :meth:`commit`
+                    table.store["bitvec"] = self.transport.write(
+                        table.store["bitvec"], jnp.asarray(cids, jnp.int32),
+                        jnp.ones((len(cids),), bool),
+                        region=f"{table.schema.name}/bitvec")
+                for s, committed, cid in zip(sessions, np.asarray(ok), cids):
+                    s.committed = bool(committed)
+                    s.cid = int(cid)
+        return [np.asarray([s.committed for s in w], bool) for w in waves]
+
+    def _jit_commit_pipelined(self, chunks: int, region_ns: str, K: int):
+        key = ("commit_pipelined", K, chunks, region_ns)
+
+        def fn(store, txns_list):
+            return rsi.commit_pipelined(store, txns_list,
+                                        transport=self.transport,
+                                        chunks=chunks, region_ns=region_ns)
+        if getattr(self.transport, "recorder", None) is not None:
+            return fn          # eager: exact recorded access intervals
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
 
     def _jit_commit(self, isolation: str, chunks: int, region_ns: str = ""):
         key = ("commit", isolation, chunks, region_ns)

@@ -3,7 +3,10 @@
 One RDMA-style substrate for every distributed protocol in the repo:
 
   verbs      read / write / cas / fetch_add over named regions
-             (``NamPool`` allocates regions and binds shardings)
+             (``NamPool`` allocates regions and binds shardings); async
+             variants (``read_async``/``write_async``/``route_async`` on
+             transports) return a ``Completion`` whose ``wait()`` is the
+             ordering fence — issue, overlap, then wait (docs/fabric.md)
   route()    the single radix-into-fixed-buffers request router: all
              fields + the valid mask packed into ONE contiguous u32 wire
              buffer (one all_to_all per direction regardless of field
@@ -40,11 +43,11 @@ from repro.fabric.router import (RoutePlan, RouteResult, bucket_ranks,
                                  packed_row_words, plan_route, route,
                                  unpack_fields)
 from repro.fabric.transport import LocalTransport, MeshTransport, Transport
-from repro.fabric.verbs import (NamPool, Region, cas, fetch_add, read,
-                                write)
+from repro.fabric.verbs import (Completion, NamPool, Region, cas, fetch_add,
+                                read, write)
 
 __all__ = [
-    "NamPool", "Region", "read", "write", "cas", "fetch_add",
+    "NamPool", "Region", "read", "write", "cas", "fetch_add", "Completion",
     "route", "RouteResult", "RoutePlan", "plan_route", "bucket_ranks",
     "pack_fields", "unpack_fields", "packed_row_words",
     "chunked_all_to_all",

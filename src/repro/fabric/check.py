@@ -400,10 +400,15 @@ class ScheduleRecorder:
             self.note("wave", wave=self._wave, label=label)
         return self._wave
 
-    def fence(self, kind: str = "fence", *, local: bool = False):
+    def fence(self, kind: str = "fence", *, local: bool = False,
+              agent: Optional[str] = None):
         """Record an ordering edge: global barrier (default) or a local
-        completion fence for the current agent."""
-        scope = self.current_agent if local else None
+        completion fence for the current agent.  ``agent=`` pins a local
+        fence to a specific issuer regardless of the current agent
+        context — a deferred ``Completion.wait()`` may fire outside the
+        ``with rec.agent(...)`` block that issued the verb."""
+        scope = (str(agent) if agent is not None
+                 else self.current_agent) if local else None
         if local:
             self._afence[scope] = self._afence.get(scope, 0) + 1
         else:
@@ -414,11 +419,19 @@ class ScheduleRecorder:
 
     def record(self, verb: str, region: str, idx, *,
                region_len: Optional[int] = None, ok=None, new=None,
-               meta: Optional[dict] = None) -> Access:
+               meta: Optional[dict] = None,
+               deferred: bool = False) -> Access:
         """Append one verb access.  ``idx`` may be traced — the record
         then covers the whole region conservatively.  CAS records on a
         declared lock region also compute the acquired row set (rows where
-        the CAS succeeded installing the lock bit)."""
+        the CAS succeeded installing the lock bit).
+
+        ``deferred=True`` (the async verbs) withholds the completion
+        fence this verb would normally auto-append — the issuer overlaps
+        other work and the fence fires at ``Completion.wait()`` via
+        :meth:`complete`.  An issued-but-never-waited async verb is
+        therefore exactly an unsignaled one-sided request, and the races
+        it enables are what :func:`check_schedule` reports."""
         cidx = _concrete(idx)
         if cidx is not None:
             rows = np.unique(cidx[cidx >= 0]).astype(np.int64)
@@ -441,11 +454,26 @@ class ScheduleRecorder:
                    afence=self._afence.get(self.current_agent, 0),
                    meta=meta)
         self.accesses.append(a)
-        if verb in _COMPLETION_VERBS:
-            self.fence(f"{verb.lower()}-completion", local=True)
-        if verb == FETCH_ADD and region in self.epoch_protocols:
-            self.fence("epoch-publish")
+        if not deferred:
+            if verb in _COMPLETION_VERBS:
+                self.fence(f"{verb.lower()}-completion", local=True)
+            if verb == FETCH_ADD and region in self.epoch_protocols:
+                self.fence("epoch-publish")
         return a
+
+    def complete(self, access: Access):
+        """Fire the deferred completion edge of an async verb recorded
+        with ``deferred=True`` — the ``Completion.wait()`` fence.  Always
+        a local fence for the *issuing* agent (whatever agent context is
+        active when the caller finally waits); a waited WRITE becomes a
+        signaled write, the local ordering edge a plain WRITE lacks.  A
+        FETCH_ADD on a declared epoch region additionally publishes
+        globally, exactly as its synchronous completion would."""
+        self.fence(f"{access.verb.lower()}-completion", local=True,
+                   agent=access.agent)
+        if access.verb == FETCH_ADD \
+                and access.region in self.epoch_protocols:
+            self.fence("epoch-publish")
 
     def note(self, kind: str, **meta):
         """Append a semantic (non-verb) event, e.g. a PS pull
@@ -608,20 +636,25 @@ def _mesh_transport():
 
 
 def lint_route(num_fields: int = 3, *, chunks: int = 1,
-               response: bool = False, window: int = 0) -> Report:
+               response: bool = False, window: int = 0,
+               overlap: bool = False) -> Report:
     """Lint one routed direction (plus optionally the paired response
     exchange) under a mesh transport: budget = 1 all_to_all out (+1 back),
     sort-free, host-free, packed u32 on the wire.  ``window`` routes with
     a doorbell-batching cap — a pacing declaration the simulator prices
     (docs/netsim.md); the lint proves the windowed trace emits the SAME
-    single fused collective (pacing must never unfuse the wire)."""
+    single fused collective (pacing must never unfuse the wire).
+    ``overlap`` lints the double-buffered chunk pipeline under the SAME
+    budget: the per-chunk exchanges live inside one scan, i.e. one
+    syntactic site — overlapping compute with the wire must never unfuse
+    it either."""
     tp = _mesh_transport()
 
     def body(*leaves):
         fields = {f"f{i}": leaf for i, leaf in enumerate(leaves)}
         dest = (leaves[0] % jnp.uint32(tp.n)).astype(jnp.int32)
         res = tp.route(fields, dest, cap=ROUTE_CAP, chunks=chunks,
-                       window=window or None)
+                       window=window or None, overlap=overlap)
         tot = sum(jnp.sum(leaf) for leaf in
                   jax.tree_util.tree_leaves(res.fields))
         if response:
@@ -633,7 +666,8 @@ def lint_route(num_fields: int = 3, *, chunks: int = 1,
     budget = CollectiveBudget({"all_to_all": 2 if response else 1})
     name = (f"route[{num_fields}f,chunks={chunks}"
             + (",response" if response else "")
-            + (f",window={window}" if window else "") + "]")
+            + (f",window={window}" if window else "")
+            + (",overlap" if overlap else "") + "]")
     return lint_fn(lambda *a: tp.run(body, a, out_reps=True), *args,
                    rules=HOT_PATH_RULES + (budget,), target=name)
 
@@ -652,10 +686,22 @@ def lint_verbs() -> List[Report]:
                     target="verbs/fetch_add")]
 
 
-#: all_to_all sites in one commit wave: prepare route + grant exchange +
+#: all_to_all sites in ONE commit wave: prepare route + grant exchange +
 #: install route (the install reuses the prepare's RoutePlan, so a fourth
 #: site would mean the plan-reuse contract broke).
 COMMIT_ALL_TO_ALL_BUDGET = 3
+
+
+def commit_all_to_all_budget(waves: int = 1) -> int:
+    """Collective budget of a commit of ``waves`` (possibly pipelined)
+    transaction waves: every wave contributes its own prepare route +
+    grant exchange + install route, whether the waves run back-to-back or
+    with wave i's install overlapping wave i+1's prepare.  The former rule
+    hard-coded the three *sequential* sites of a single wave on one
+    RoutePlan, wrongly rejecting the pipelined trace — the budget scales
+    with waves, and the *ordering* burden moves to the explicit
+    ``Completion.wait()`` fences the race detector checks."""
+    return COMMIT_ALL_TO_ALL_BUDGET * int(waves)
 
 
 def lint_commit(protocol: str = "rsi") -> Report:
@@ -670,9 +716,30 @@ def lint_commit(protocol: str = "rsi") -> Report:
                         cid=jnp.arange(4, dtype=jnp.uint32))
     commit = {"rsi": rsi.commit, "2pc": twopc.commit}[protocol]
     rules = HOT_PATH_RULES + (
-        CollectiveBudget({"all_to_all": COMMIT_ALL_TO_ALL_BUDGET}),)
+        CollectiveBudget({"all_to_all": commit_all_to_all_budget(1)}),)
     return lint_fn(lambda s, t: commit(s, t, transport=tp), store, txns,
                    rules=rules, target=f"{protocol}.commit")
+
+
+def lint_commit_pipelined(waves: int = 2) -> Report:
+    """Lint the pipelined commit's trace: 3 all_to_all sites *per wave*
+    (:func:`commit_all_to_all_budget`), sort-free, host-free, packed wire
+    — the double-buffered schedule must not change what's on the wire."""
+    from repro.core import rsi
+    tp = _mesh_transport()
+    cfg = rsi.StoreCfg(num_records=16, payload_words=2, num_timestamps=32)
+    store = rsi.init_store(cfg)
+    wv = [rsi.TxnBatch(write_recs=jnp.zeros((4, 2), jnp.int32),
+                       read_cids=jnp.zeros((4, 2), jnp.uint32),
+                       new_payload=jnp.zeros((4, 2, 2), jnp.uint32),
+                       cid=jnp.arange(4 * i, 4 * i + 4, dtype=jnp.uint32))
+          for i in range(waves)]
+    rules = HOT_PATH_RULES + (
+        CollectiveBudget({"all_to_all": commit_all_to_all_budget(waves)}),)
+    return lint_fn(
+        lambda s, w: rsi.commit_pipelined(s, w, transport=tp),
+        store, wv, rules=rules,
+        target=f"rsi.commit_pipelined[waves={waves}]")
 
 
 def lint_ps_push() -> Report:
@@ -779,6 +846,61 @@ def record_windowed_route() -> ScheduleRecorder:
     return rec
 
 
+def record_overlapped_route() -> ScheduleRecorder:
+    """The shipped double-buffered route schedule: a producer's async
+    WRITE lands (and is waited — a *signaled* write), an async overlapped
+    route goes on the wire, the issuer overlaps local work, and the
+    consumer READs the landed region only after ``Completion.wait()``.
+    That wait IS the route-roundtrip global fence, so the schedule
+    records clean; omit either wait and the same accesses race (the
+    seeded fixtures in tests/test_check.py)."""
+    from repro.fabric import LocalTransport
+    rec = ScheduleRecorder()
+    tp = LocalTransport()
+    tp.recorder = rec
+    words = jnp.zeros((64,), jnp.uint32)
+    idx = jnp.arange(8, dtype=jnp.int32)
+    with rec.agent("producer"):
+        wc = tp.write_async(words, idx, jnp.ones((8,), jnp.uint32),
+                            region="async/buf")
+        words = wc.wait()                    # signaled write completion
+    plan = tp.plan_route(idx % tp.n, cap=16, window=4)
+    c = tp.route_async({"k": words[:8]}, plan=plan, chunks=2)
+    c.wait()                                 # route-roundtrip fence
+    with rec.agent("consumer"):
+        tp.read(words, idx, region="async/buf")
+    return rec
+
+
+def record_pipelined_commit(waves: int = 2) -> ScheduleRecorder:
+    """Run the pipelined RSI commit (wave i's install round overlapping
+    wave i+1's prepare) eagerly through a recording transport with the
+    lock protocol declared, and return the schedule — the proof that the
+    shipped overlap's explicit completion edges keep every install WRITE
+    inside its acquiring wave and ordered before the next wave's CAS."""
+    from repro.core import rsi
+    from repro.db import Database
+    from repro.fabric import LocalTransport
+    rec = ScheduleRecorder()
+    tp = LocalTransport()
+    tp.recorder = rec
+    db = Database(tp)
+    t = db.create_table("acct", 32, payload_words=2, num_timestamps=128)
+    t.seed(np.arange(8), vals=np.ones((8, 2), np.uint32))
+    rec.declare_locks("acct/words", ("acct/payload", "acct/cids"),
+                      lock_bit=int(rsi.LOCK_BIT))
+    wave_list = []
+    for wv in range(waves):
+        s = db.session().begin()
+        recs = [2 * wv, 2 * wv + 1]
+        pay, rc, _ = s.get("acct", recs)
+        s.put("acct", recs, np.asarray(pay) + 1,
+              read_cids=np.asarray(rc))
+        wave_list.append([s])
+    db.commit_pipelined(wave_list)
+    return rec
+
+
 def race_sessions(isolation: str = "rsi") -> Report:
     return check_schedule(record_session_waves(isolation),
                           target=f"sessions/{isolation}")
@@ -792,6 +914,16 @@ def race_windowed_route() -> Report:
 def race_paramserver() -> Report:
     return check_schedule(record_paramserver(),
                           target="paramserver/trainer")
+
+
+def race_overlapped_route() -> Report:
+    return check_schedule(record_overlapped_route(),
+                          target="route/overlapped")
+
+
+def race_pipelined_commit(waves: int = 2) -> Report:
+    return check_schedule(record_pipelined_commit(waves),
+                          target=f"rsi/pipelined[waves={waves}]")
 
 
 # ------------------------------------------------------- CLI plumbing ----
@@ -810,6 +942,16 @@ SUITES: Dict[str, Callable[[], List[Report]]] = {
     "sim": lambda: [lint_route(2, window=4),
                     lint_route(3, chunks=2, window=2),
                     race_windowed_route()],
+    # async verbs + double-buffered routes (docs/fabric.md "the async
+    # contract"): the overlapped chunk pipeline keeps the one-collective
+    # budget, the pipelined commit is 3 sites per wave, and the shipped
+    # async schedules — overlapped route, pipelined RSI commit — record
+    # race-clean under their explicit Completion.wait() fences
+    "async": lambda: [lint_route(3, chunks=4, overlap=True),
+                      lint_route(2, response=True, overlap=True),
+                      lint_commit_pipelined(2),
+                      race_overlapped_route(),
+                      race_pipelined_commit()],
 }
 
 #: which check suites gate each paper figure (benchmarks/run.py --check).
@@ -817,7 +959,7 @@ FIGURE_SUITES: Dict[str, Tuple[str, ...]] = {
     "fig2": ("verbs", "route"),
     "fig6": ("rsi", "2pc"),
     "fig7": ("route",),
-    "fig8a": ("route",),
+    "fig8a": ("route", "async"),
     "fig8b": ("route", "verbs"),
     "fig9": ("paramserver", "route"),
     "fig10": ("sim", "route"),

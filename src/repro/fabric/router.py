@@ -136,16 +136,24 @@ def _unpack_leaf(words, shape, dtype) -> jnp.ndarray:
     return flat.reshape((B,) + tuple(shape[1:]))
 
 
-def pack_fields(fields):
+def pack_fields(fields, valid: bool = True):
     """Pack a request pytree into one (A, row_words) uint32 buffer whose
     last lane is the valid mask (all ones pre-scatter: empty buffer slots
     keep the zero lane, so occupancy travels inside the rows for free).
-    Returns (packed, treedef, leaf_specs)."""
+    Returns (packed, treedef, leaf_specs).
+
+    ``valid=False`` omits the trailing valid lane — the fused Pallas
+    scatter path (``kernels.radix_partition(fuse_valid=True)``) appends
+    it inside the kernel as each row lands, so binning and wire-packing
+    are one kernel pass."""
     leaves, treedef = jax.tree_util.tree_flatten(fields)
     specs = [(l.shape, l.dtype) for l in leaves]
     A = leaves[0].shape[0] if leaves else 0
     cols = [_pack_leaf(l) for l in leaves]
-    cols.append(jnp.ones((A, 1), WORD))
+    if valid:
+        cols.append(jnp.ones((A, 1), WORD))
+    elif not cols:
+        cols.append(jnp.zeros((A, 0), WORD))
     return jnp.concatenate(cols, axis=1), treedef, specs
 
 
@@ -248,10 +256,32 @@ def _scatter_rows(rows, plan: RoutePlan, mask):
     return buf.at[slot].set(rows, mode="drop")
 
 
+def _invert_plan(plan: RoutePlan, mask) -> jnp.ndarray:
+    """Invert a plan's request->slot map into a slot->request gather index:
+    ``inv[s]`` = index of the request occupying wire slot ``s``, or ``A``
+    (one past the batch) for empty slots — so a gather from the rows padded
+    with one zero row materializes any *slice* of the wire buffer without
+    touching the rest.  This is what makes the double-buffered route a
+    per-chunk pipeline: chunk k+1's pack is a gather over its own slot
+    range only, independent of chunk k already on the wire.
+
+    The scatter building ``inv`` is O(n*cap + A) scalar work; kept slots
+    are unique by construction (dest*cap + rank-in-bucket), masked/overflow
+    requests all carry the OOB sentinel slot and are dropped."""
+    slot = plan.slot if mask is None else jnp.where(
+        mask & plan.keep, plan.slot, plan.n * plan.cap)
+    A = slot.shape[0]
+    return jnp.full((plan.n * plan.cap,), A, jnp.int32).at[slot].set(
+        jnp.arange(A, dtype=jnp.int32), mode="drop", unique_indices=True)
+
+
 def _pallas_scatter_rows(rows, dest, n: int, cap: int):
     """Scatter via the Pallas software-managed-buffer radix partitioner
     (TPU): same first-come / capped / filtered semantics as the reference
-    scatter, binning done bucket-parallel in VMEM."""
+    scatter, binning done bucket-parallel in VMEM.  ``rows`` are the
+    valid-less packed lanes (``pack_fields(valid=False)``); the kernel
+    appends the valid lane itself (``fuse_valid=True``), returning the
+    full wire rows in one pass."""
     from repro.kernels import ops
     A, w = rows.shape
     bn = 256
@@ -260,8 +290,9 @@ def _pallas_scatter_rows(rows, dest, n: int, cap: int):
         rows = jnp.pad(rows, ((0, pad), (0, 0)))
         dest = jnp.pad(dest.astype(jnp.int32), (0, pad),
                        constant_values=-1)
-    out, _ = ops.radix_partition(rows, dest.astype(jnp.int32), n, cap)
-    return out.reshape(n * cap, w)
+    out, _ = ops.radix_partition(rows, dest.astype(jnp.int32), n, cap,
+                                 fuse_valid=True)
+    return out.reshape(n * cap, w + 1)
 
 
 def _resolve_backend(backend: Optional[str]) -> str:
@@ -279,7 +310,8 @@ def route(fields, dest=None, *, n: Optional[int] = None,
           exchange: Optional[Callable] = None,
           plan: Optional[RoutePlan] = None, mask=None,
           backend: Optional[str] = None,
-          window: Optional[int] = None) -> RouteResult:
+          window: Optional[int] = None,
+          overlap: bool = False) -> RouteResult:
     """Radix-partition `fields` by `dest` into (n, cap) fixed buffers and
     (optionally) exchange them — as ONE packed wire buffer, one
     ``all_to_all``, any number of fields.  Pass ``plan=`` (from
@@ -287,7 +319,18 @@ def route(fields, dest=None, *, n: Optional[int] = None,
     (requires a plan) unsends requests without re-ranking.  ``window=``
     declares the doorbell-batching cap for contention pricing (defaults to
     the plan's; the exchanged bits are identical at any window — see
-    :class:`RoutePlan`).  See the module docstring for semantics."""
+    :class:`RoutePlan`).  See the module docstring for semantics.
+
+    ``overlap=True`` selects the **double-buffered** pipeline: the slot map
+    is inverted once (:func:`_invert_plan`) and each chunk's wire buffer is
+    then a *gather* over that chunk's slot range only, so chunk k+1 packs
+    while chunk k's exchange is on the wire (with ``exchange=None`` the
+    whole buffer is one gather).  Bit-for-bit identical to the synchronous
+    scatter path — same slots, same drops, same wire bytes — the overlap
+    changes the *schedule*, never the bits (guarded by
+    ``tests/test_async.py``).  Legal whenever a plan-backed route is: the
+    inversion needs the plan's slot ranks, so ``overlap`` forces the jnp
+    plan path (no pallas scatter; the gathers replace it)."""
     if plan is not None:
         n, cap = plan.n, plan.cap
         if window is None:
@@ -299,8 +342,42 @@ def route(fields, dest=None, *, n: Optional[int] = None,
         raise ValueError("mask= only applies to a reused plan=")
     if cap % chunks != 0:
         raise ValueError(f"cap={cap} not divisible by chunks={chunks}")
-    rows, treedef, specs = pack_fields(fields)
+    if overlap:
+        if plan is None:
+            plan = plan_route(dest, n=n, cap=cap)
+            mask = None
+        dropped = (plan.dropped if mask is None else
+                   jnp.sum((plan.overflow & mask).astype(jnp.int32)))
+        rows, treedef, specs = pack_fields(fields)
+        inv = _invert_plan(plan, mask)
+        padded = jnp.concatenate(
+            [rows, jnp.zeros((1, rows.shape[1]), WORD)], axis=0)
+        if exchange is None:
+            buf = padded[inv]
+            sent, sent_valid = unpack_fields(buf, treedef, specs)
+            return RouteResult(sent, sent_valid, dropped, sent, sent_valid)
+        c = cap // chunks
+        w = rows.shape[1]
+        inv_c = jnp.moveaxis(inv.reshape(n, chunks, c), 1, 0)
+
+        def step(_, ic):
+            sent_c = padded[ic.reshape(n * c)]     # pack chunk (gather)
+            return None, (sent_c, exchange(sent_c))   # chunk on the wire
+
+        _, (sent_s, recv_s) = jax.lax.scan(step, None, inv_c)
+
+        def restripe(x):
+            return jnp.moveaxis(x.reshape(chunks, n, c, w), 0, 1
+                                ).reshape(n * cap, w)
+
+        sent, sent_valid = unpack_fields(restripe(sent_s), treedef, specs)
+        recv_fields, valid = unpack_fields(restripe(recv_s), treedef, specs)
+        return RouteResult(recv_fields, valid, dropped, sent, sent_valid)
     if plan is None and _resolve_backend(backend) == "pallas":
+        # Fused pack+bin: rows travel valid-less and the kernel appends
+        # the valid lane as each row lands, so binning and wire-packing
+        # are one kernel pass over the batch.
+        rows, treedef, specs = pack_fields(fields, valid=False)
         dest = dest.astype(jnp.int32)
         deliverable = (dest >= 0) & (dest < n)
         counts = jnp.zeros((n,), jnp.int32).at[
@@ -308,6 +385,7 @@ def route(fields, dest=None, *, n: Optional[int] = None,
         dropped = jnp.sum(jnp.maximum(counts - cap, 0))
         buf = _pallas_scatter_rows(rows, dest, n, cap)
     else:
+        rows, treedef, specs = pack_fields(fields)
         if plan is None:
             plan = plan_route(dest, n=n, cap=cap)
             mask = None

@@ -204,11 +204,76 @@ class Transport:
                                  region_len=words.shape[0])
         return out
 
+    # ---------------------------------------------------- async verbs ----
+
+    def _deferred(self, value, acc):
+        """Wrap a verb result in a Completion whose wait() fires the
+        deferred completion fence (if a recorder saw the access)."""
+        rec = self.recorder
+        on_wait = (lambda: rec.complete(acc)) if acc is not None else None
+        return _verbs.Completion(value, on_wait=on_wait)
+
+    def read_async(self, region_arr, idx, *, region=None):
+        """Async READ: issue -> overlap -> ``wait()``.  Counts and computes
+        exactly like :meth:`read` (JAX arrays are functional — the value is
+        ready at issue), but the ordering edge is withheld: the access is
+        recorded *deferred* and the READ-completion fence fires only when
+        the returned Completion is waited.  An unwaited async READ is an
+        unsignaled one-sided request — later writes to the same rows race
+        it, and ``fabric.check`` will say so."""
+        self._count("read", idx.size, idx.size * _row_bytes(region_arr))
+        out = _verbs.read(region_arr, idx)
+        acc = None
+        if self.recorder is not None and region is not None:
+            acc = self.recorder.record("READ", region, idx,
+                                       region_len=region_arr.shape[0],
+                                       deferred=True)
+        return self._deferred(out, acc)
+
+    def write_async(self, region_arr, idx, values, *, region=None):
+        """Async WRITE.  Same counting/compute as :meth:`write`; the
+        difference from the sync verb is that ``wait()`` is a *signaled*
+        write — it fires a write-completion fence (an ordering edge the
+        plain one-sided WRITE never has), so a waited async WRITE can
+        legally precede a dependent access where an unwaited one races."""
+        self._count("write", idx.size, values.size * values.dtype.itemsize)
+        out = _verbs.write(region_arr, idx, values)
+        acc = None
+        if self.recorder is not None and region is not None:
+            acc = self.recorder.record("WRITE", region, idx,
+                                       region_len=region_arr.shape[0],
+                                       deferred=True)
+        return self._deferred(out, acc)
+
     # ---------------------------------------------------------- router ---
+
+    def _route_counted(self, fields, dest, *, cap, chunks, plan, mask,
+                       window, overlap):
+        """Shared body of :meth:`route`/:meth:`route_async`: count the
+        wire traffic and run the router — NO fence (the caller decides
+        whether the round-trip edge fires now or at ``wait()``)."""
+        n = self.n
+        if plan is not None:
+            cap = plan.cap
+            if window is None:
+                window = plan.window
+        elif cap is None:
+            raise ValueError("route needs cap= (or a plan=)")
+        nbytes = n * cap * _router.WORD_BYTES * _router.packed_row_words(
+            fields)
+        self._count("route", n * chunks, nbytes,
+                    window=int(window or 0), collective=True)
+        # double-buffered path: the router drives the per-chunk pipeline
+        # itself, so hand it a plain single-chunk exchange of chunk width.
+        exchange = (self._make_exchange(cap // chunks, 1) if overlap
+                    else self._make_exchange(cap, chunks))
+        return _router.route(fields, dest, n=n, cap=cap, chunks=chunks,
+                             exchange=exchange, plan=plan, mask=mask,
+                             window=window, overlap=overlap)
 
     def route(self, fields, dest=None, *, cap: Optional[int] = None,
               chunks: int = 1, plan=None, mask=None,
-              window: Optional[int] = None):
+              window: Optional[int] = None, overlap: bool = False):
         """Radix-route a request pytree into (n, cap) buffers and exchange
         them with the peers (see ``repro.fabric.route``).
 
@@ -227,23 +292,34 @@ class Transport:
         0/None = post everything at once).  The exchanged bits are
         identical at any window: it feeds the outstanding-request
         counters and the event trace, and ``repro.fabric.sim`` prices it
-        (docs/netsim.md "netsim v2")."""
-        n = self.n
-        if plan is not None:
-            cap = plan.cap
-            if window is None:
-                window = plan.window
-        elif cap is None:
-            raise ValueError("route needs cap= (or a plan=)")
-        nbytes = n * cap * _router.WORD_BYTES * _router.packed_row_words(
-            fields)
-        self._count("route", n * chunks, nbytes,
-                    window=int(window or 0), collective=True)
-        res = _router.route(fields, dest, n=n, cap=cap, chunks=chunks,
-                            exchange=self._make_exchange(cap, chunks),
-                            plan=plan, mask=mask, window=window)
+        (docs/netsim.md "netsim v2").
+
+        overlap=: run the double-buffered chunk pipeline (chunk k+1 packs
+        while chunk k is on the wire — ``repro.fabric.router.route``'s
+        ``overlap``).  Identical bits and identical counters; a sync
+        overlapped route still fences at return."""
+        res = self._route_counted(fields, dest, cap=cap, chunks=chunks,
+                                  plan=plan, mask=mask, window=window,
+                                  overlap=overlap)
         self._rec_fence("route-roundtrip")
         return res
+
+    def route_async(self, fields, dest=None, *, cap: Optional[int] = None,
+                    chunks: int = 1, plan=None, mask=None,
+                    window: Optional[int] = None, overlap: bool = True):
+        """Async route: issue -> overlap -> ``wait()``.  Counts and
+        computes exactly like :meth:`route` (default ``overlap=True``:
+        the double-buffered pipeline is the point of going async), but
+        the **route-roundtrip global fence** moves from issue to the
+        returned Completion's ``wait()``.  Work interleaved between issue
+        and wait genuinely overlaps the exchange — and accesses that need
+        the routed buffers MUST come after ``wait()``, or the race
+        detector flags them against the in-flight route."""
+        res = self._route_counted(fields, dest, cap=cap, chunks=chunks,
+                                  plan=plan, mask=mask, window=window,
+                                  overlap=overlap)
+        return _verbs.Completion(
+            res, on_wait=lambda: self._rec_fence("route-roundtrip"))
 
     def plan_route(self, dest, *, cap: int, window: int = 0):
         """Precompute the slot assignment for ``dest`` (one sort-free

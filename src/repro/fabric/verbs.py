@@ -63,6 +63,47 @@ class NamPool:
                 for n, r in self.regions.items()}
 
 
+# -------------------------------------------------------- completions ----
+
+
+class Completion:
+    """Completion token of an async verb: the issue -> overlap -> wait
+    idiom (paper §3.3 — one-sided verbs exist so the client can issue,
+    overlap useful work, and await the completion later).
+
+    ``wait()`` returns the verb's result and — exactly once — fires the
+    deferred ordering edge the verb withheld at issue time (under an
+    attached :class:`~repro.fabric.check.ScheduleRecorder`, the
+    completion fence; under no recorder, nothing).  The *value* is
+    computed eagerly — JAX arrays are functional, so there is nothing to
+    poll — which means an async verb changes the recorded/priced
+    *schedule*, never the bits: an issued-but-unwaited verb is exactly
+    the unsignaled one-sided request whose races ``fabric.check`` hunts.
+
+    ``wait()`` is idempotent; ``done`` tells whether it has fired.
+    """
+
+    __slots__ = ("_value", "_on_wait", "_done")
+
+    def __init__(self, value, on_wait=None):
+        self._value = value
+        self._on_wait = on_wait
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def wait(self):
+        """Block on the completion: fire the deferred fence (once) and
+        return the verb's result."""
+        if not self._done:
+            self._done = True
+            if self._on_wait is not None:
+                self._on_wait()
+        return self._value
+
+
 # ------------------------------------------------------------- verbs -----
 
 def read(region_arr, idx):

@@ -20,11 +20,12 @@ def _interp(interpret):
 
 
 @partial(jax.jit, static_argnames=("num_buckets", "cap", "block_n",
-                                   "interpret"))
+                                   "interpret", "fuse_valid"))
 def radix_partition(vals, bucket, num_buckets, cap, block_n=256,
-                    interpret=None):
+                    interpret=None, fuse_valid=False):
     return _rp.radix_partition(vals, bucket, num_buckets, cap,
-                               block_n=block_n, interpret=_interp(interpret))
+                               block_n=block_n, interpret=_interp(interpret),
+                               fuse_valid=fuse_valid)
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k",

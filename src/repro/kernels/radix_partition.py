@@ -20,7 +20,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import _compat
 
 
-def _kernel(bucket_ref, vals_ref, out_ref, count_ref, cnt_sm, *, cap, bn):
+def _kernel(bucket_ref, vals_ref, out_ref, count_ref, cnt_sm,
+            *, cap, bn, fuse_valid):
     p = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -38,6 +39,12 @@ def _kernel(bucket_ref, vals_ref, out_ref, count_ref, cnt_sm, *, cap, bn):
         @pl.when(mask[i] & (cnt < cap))
         def _():
             row = jax.lax.dynamic_slice_in_dim(v, i, 1, axis=0)
+            if fuse_valid:
+                # Fused wire-pack: append the valid lane as the row lands,
+                # so binning + packing is one pass (empty slots keep the
+                # zeroed lane from the j == 0 init above).
+                row = jnp.concatenate(
+                    [row, jnp.ones((1, 1), row.dtype)], axis=1)
             out_ref[0, pl.ds(cnt, 1), :] = row
         return cnt + jnp.where(mask[i], 1, 0)
 
@@ -50,25 +57,32 @@ def _kernel(bucket_ref, vals_ref, out_ref, count_ref, cnt_sm, *, cap, bn):
 
 
 def radix_partition(vals, bucket, num_buckets: int, cap: int,
-                    *, block_n: int = 256, interpret: bool = True):
+                    *, block_n: int = 256, interpret: bool = True,
+                    fuse_valid: bool = False):
     """vals: (N, D); bucket: (N,) int32 in [0, num_buckets).
-    Returns (out (num_buckets, cap, D), counts (num_buckets,))."""
+    Returns (out (num_buckets, cap, D), counts (num_buckets,)).
+
+    ``fuse_valid=True`` widens the output rows by one lane and writes a
+    ones valid lane alongside each landed row (the router's packed wire
+    format), returning (num_buckets, cap, D + 1)."""
     n, d = vals.shape
     assert n % block_n == 0, (n, block_n)
+    d_out = d + 1 if fuse_valid else d
     grid = (num_buckets, n // block_n)
     return pl.pallas_call(
-        functools.partial(_kernel, cap=cap, bn=block_n),
+        functools.partial(_kernel, cap=cap, bn=block_n,
+                          fuse_valid=fuse_valid),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n,), lambda p, j: (j,)),
             pl.BlockSpec((block_n, d), lambda p, j: (j, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, cap, d), lambda p, j: (p, 0, 0)),
+            pl.BlockSpec((1, cap, d_out), lambda p, j: (p, 0, 0)),
             pl.BlockSpec((1,), lambda p, j: (p,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((num_buckets, cap, d), vals.dtype),
+            jax.ShapeDtypeStruct((num_buckets, cap, d_out), vals.dtype),
             jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
         ],
         scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],

@@ -233,6 +233,156 @@ def test_lock_table_claims_record_clean():
     assert rep.ok, rep.render()
 
 
+# ----------------------- async verbs + pipelined commit (ISSUE 8) --------
+# Seeded-violation fixtures where an overlapped schedule omits a required
+# ``Completion.wait()``, plus the shipped schedules recording clean and the
+# collective-budget regression in both directions.
+
+
+def test_fixture_unwaited_route_async_races():
+    """Producer fills the route buffer (signaled write), issues the route
+    async, and the consumer reads — with the route completion never
+    waited, the roundtrip fence never fires and the pair races."""
+    rec, t = _rec_tp()
+    words = jnp.arange(16, dtype=jnp.uint32)
+    buf = jnp.zeros((16,), jnp.uint32)
+    with rec.agent("producer"):
+        t.write_async(buf, jnp.arange(8, dtype=jnp.int32), words[:8],
+                      region="async/buf").wait()
+    c = t.route_async({"k": words[:8]}, jnp.zeros((8,), jnp.int32), cap=16)
+    assert not c.done                       # MISSING: c.wait()
+    with rec.agent("consumer"):
+        t.read(buf, jnp.arange(8, dtype=jnp.int32), region="async/buf")
+    rep = check.check_schedule(rec, target="fixture-unwaited-route")
+    assert [v.rule for v in rep.violations] == ["rw-race"]
+    v = rep.violations[0]
+    assert v.where == "async/buf"                         # region named
+    assert "WRITE#0" in v.detail and "READ#1" in v.detail  # verb pair
+    # the SAME schedule with the completion waited records clean
+    rec, t = _rec_tp()
+    with rec.agent("producer"):
+        t.write_async(buf, jnp.arange(8, dtype=jnp.int32), words[:8],
+                      region="async/buf").wait()
+    t.route_async({"k": words[:8]}, jnp.zeros((8,), jnp.int32),
+                  cap=16).wait()
+    with rec.agent("consumer"):
+        t.read(buf, jnp.arange(8, dtype=jnp.int32), region="async/buf")
+    assert check.check_schedule(rec).ok
+
+
+def test_fixture_unwaited_write_async_pair_ww_races():
+    """Two agents post unsignaled WRITEs into overlapping rows of the
+    route buffer — the ww-race on the route buffer, verb pair + region
+    named; a global flush fence between them orders the pair."""
+    rec, t = _rec_tp()
+    buf = jnp.zeros((16,), jnp.uint32)
+    with rec.agent("a"):
+        t.write_async(buf, jnp.array([1, 2], jnp.int32),
+                      jnp.ones((2,), jnp.uint32), region="route/buf")
+    with rec.agent("b"):
+        t.write_async(buf, jnp.array([2, 3], jnp.int32),
+                      jnp.ones((2,), jnp.uint32), region="route/buf")
+    rep = check.check_schedule(rec, target="fixture-async-ww")
+    assert [v.rule for v in rep.violations] == ["ww-race"]
+    v = rep.violations[0]
+    assert v.where == "route/buf"
+    assert "WRITE#0" in v.detail and "WRITE#1" in v.detail
+    assert "rows {2}" in v.detail
+    # ordered by an explicit global fence between the posts: clean
+    rec, t = _rec_tp()
+    with rec.agent("a"):
+        t.write_async(buf, jnp.array([1, 2], jnp.int32),
+                      jnp.ones((2,), jnp.uint32), region="route/buf")
+    rec.fence("flush")
+    with rec.agent("b"):
+        t.write_async(buf, jnp.array([2, 3], jnp.int32),
+                      jnp.ones((2,), jnp.uint32), region="route/buf")
+    assert check.check_schedule(rec).ok
+
+
+def test_fixture_install_write_overlapping_next_prepare_read():
+    """The pipelined-commit hazard: wave 0's install WRITE is still in
+    flight when wave 1's prepare READs the same store rows.  Dropping the
+    install completion (the route-roundtrip fence) makes it an rw-race;
+    the fence — exactly what ``inst_c.wait()`` fires in
+    ``rsi.commit_pipelined`` — restores the order."""
+    rec, t = _rec_tp()
+    words = jnp.zeros((16,), jnp.uint32)
+    with rec.agent("wave0"):
+        t.write_async(words, jnp.array([2, 3], jnp.int32),
+                      jnp.full((2,), 9, jnp.uint32), region="acct/words")
+    with rec.agent("wave1"):                # prepare reads the store rows
+        t.read(words, jnp.array([3, 4], jnp.int32), region="acct/words")
+    rep = check.check_schedule(rec, target="fixture-pipelined-unfenced")
+    assert [v.rule for v in rep.violations] == ["rw-race"]
+    v = rep.violations[0]
+    assert v.where == "acct/words" and "rows {3}" in v.detail
+    assert "WRITE#0" in v.detail and "READ#1" in v.detail
+    # with the install completion fence between the waves: clean
+    rec, t = _rec_tp()
+    with rec.agent("wave0"):
+        t.write_async(words, jnp.array([2, 3], jnp.int32),
+                      jnp.full((2,), 9, jnp.uint32), region="acct/words")
+    rec.fence("route-roundtrip")            # == install Completion.wait()
+    with rec.agent("wave1"):
+        t.read(words, jnp.array([3, 4], jnp.int32), region="acct/words")
+    assert check.check_schedule(rec).ok
+
+
+def test_shipped_async_schedules_record_clean():
+    """Negatives: the double-buffered route and the pipelined RSI commit
+    as shipped (all completions waited) record clean schedules."""
+    rec = check.record_overlapped_route()
+    assert rec.accesses, "schedule must not be trivially empty"
+    rep = check.race_overlapped_route()
+    assert rep.ok, rep.render()
+    rec = check.record_pipelined_commit(waves=2)
+    assert any(a.verb == "CAS" for a in rec.accesses)
+    rep = check.race_pipelined_commit(waves=2)
+    assert rep.ok, rep.render()
+
+
+def test_overlap_route_lints_same_budget():
+    # the double-buffered route's per-chunk exchange lives inside ONE scan
+    # body: still one syntactic all_to_all site, same budget as sync
+    rep = check.lint_route(3, chunks=4, overlap=True)
+    assert rep.ok, rep.render()
+
+
+def test_pipelined_commit_budget_scales_with_waves():
+    """Regression, both directions: the per-wave budget passes the
+    pipelined trace, and the former fixed budget of 3 rejects it."""
+    assert check.commit_all_to_all_budget(1) == check.COMMIT_ALL_TO_ALL_BUDGET
+    assert check.commit_all_to_all_budget(2) == \
+        2 * check.COMMIT_ALL_TO_ALL_BUDGET
+    rep = check.lint_commit_pipelined(waves=2)
+    assert rep.ok, rep.render()
+    # the old rule hard-coded 3 sequential sites on one RoutePlan; a
+    # 2-wave pipelined trace has 6 and must FAIL under it
+    from repro.core import rsi
+    tp = check._mesh_transport()
+    cfg = rsi.StoreCfg(num_records=16, payload_words=2, num_timestamps=32)
+    store = rsi.init_store(cfg)
+    wv = [rsi.TxnBatch(write_recs=jnp.zeros((4, 2), jnp.int32),
+                       read_cids=jnp.zeros((4, 2), jnp.uint32),
+                       new_payload=jnp.zeros((4, 2, 2), jnp.uint32),
+                       cid=jnp.arange(4 * i, 4 * i + 4, dtype=jnp.uint32))
+          for i in range(2)]
+    bad = check.lint_fn(
+        lambda s, w: rsi.commit_pipelined(s, w, transport=tp), store, wv,
+        rules=[check.CollectiveBudget(
+            {"all_to_all": check.COMMIT_ALL_TO_ALL_BUDGET})],
+        target="pipelined-under-old-budget")
+    assert not bad.ok
+    assert "6 all_to_all site(s) traced, budget is 3" in \
+        bad.violations[0].detail
+
+
+def test_async_suite_registered():
+    assert "async" in check.SUITES
+    assert "async" in check.FIGURE_SUITES["fig8a"]
+
+
 # --------------------------------------------------- CLI + summaries -----
 
 def test_summarize_schema():

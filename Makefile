@@ -26,6 +26,15 @@ bench-smoke:     ## timed fig2+fig10 pass on CPU: measured_s schema check only
 	assert not d['check']['violations'], d['check']; \
 	print('bench-smoke ok: fig10', len(d['measured_s']), 'measured_s entries,', \
 	d['check']['rules_run'], 'check rules clean')"
+	FIG_SCALE_SMALL=1 PYTHONPATH=src python -m benchmarks.run --figure fig_scale --time --check --json /tmp/bench-smoke
+	python -c "import json; d = json.load(open('/tmp/bench-smoke/BENCH_fig_scale.json')); \
+	assert d['timed'] and d['measured_s'], 'BENCH_fig_scale.json missing measured_s'; \
+	assert all(s > 0 for s in d['measured_s'].values()), d['measured_s']; \
+	assert d['throughput'] and d['abort_rate'] and d['retries'] and d['locality'], 'fig_scale extras missing'; \
+	assert d['txn']['commits'] and d['txn']['aborts'], d['txn']; \
+	assert not d['check']['violations'], d['check']; \
+	print('bench-smoke ok: fig_scale', len(d['measured_s']), 'measured_s entries,', \
+	d['check']['rules_run'], 'check rules clean')"
 	PYTHONPATH=src python -m repro.fabric.check --suite async -q
 
 check:           ## fabriccheck: jaxpr lint + one-sided race detector

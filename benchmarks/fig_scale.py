@@ -1,0 +1,286 @@
+"""fig_scale (ours): the million-transaction curve — throughput vs worker
+count under Zipf contention, with group commit, abort/retry economics,
+and the locality toggle (*The End of a Myth: Distributed Transactions
+Can Scale*, reproduced on the verb fabric; ROADMAP item 1).
+
+Three panels, all asserted:
+
+(a) **Abort/retry economics** (profile-independent, REAL commits): for
+    each worker count, every worker's transactions commit as one
+    coalesced ``db.commit_grouped`` wave through a counted
+    ``LocalTransport``, with ``max_retries`` bounded retry-with-backoff
+    (deterministic jitter by txn id — no runtime RNG).  Under the shared
+    Zipf streams of ``benchmarks.workloads`` the hottest rank is the same
+    record for every worker, so skew turns directly into write-write
+    CAS losses.  Asserted: Zipf(1.2) abort rate strictly exceeds
+    uniform's at every swept worker count.
+
+(b) **Throughput vs workers** (1 → 64 simulated agents): each economics
+    run is synthesized into a netsim v2 trace — worker ``w`` is an agent
+    pinned to node ``w`` of a ``workers``-shard NAM fabric (compute and
+    storage scale together), its prepare CASes and install WRITEs point
+    at each written record's declared home shard, its grant share rides
+    one collective, and every retry round re-emits its verbs behind a
+    backoff ``compute`` event.  Throughput = committed txns / simulated
+    makespan, swept across the 1GbE → EDR profile axis.  Asserted:
+    uncontended (uniform) throughput grows >= 3x from 4 to 32 workers on
+    every profile, and the Zipf(1.2) curve's 4→32 growth is strictly
+    below uniform's (the abort-driven flattening).
+
+(c) **Locality delta**: the home-affine Zipf(1.2) workload
+    (``shared=False`` — worker hot ranges are disjoint) is priced under
+    both placements of ``repro.db.assign_workers``: co-located
+    (``locality=True``, hot verbs are loopback — skip the wire, still pay
+    the NIC) vs the derangement (every hot verb exactly one shard away).
+    Same workload, same verb counts, only distances change.  Asserted:
+    ``locality=True`` throughput strictly beats ``locality=False`` on
+    every RDMA profile in the run.
+"""
+import os
+
+import numpy as np
+
+from benchmarks import timing, workloads
+from repro.db import Database, assign_workers, home_shard, local_fraction
+from repro.db.database import BACKOFF_SLOT_S, backoff_slots
+from repro.fabric import netsim, sim
+
+DEFAULT_PROFILES = ("ethernet_1g", "ipoib_fdr", "rdma_fdr4x", "rdma_edr")
+WORKERS = (1, 2, 4, 8, 16, 32, 64)
+SKEWS = {"uniform": 0.0, "zipf09": 0.9, "zipf12": 1.2}
+RECORDS = 4096
+TXNS_PER_WORKER = 8
+WRITES_PER_TXN = 2
+MAX_RETRIES = 3
+SEED = 7
+AGENT_WINDOW = 2        # outstanding grouped waves per worker agent
+CAS_BYTES = 8           # prepare: compare+swap word on the wire
+ROW_BYTES = 36          # install: 8 payload words + the version word
+READ_BYTES = 8          # retry refresh: current lock|CID word
+
+
+# ------------------------------------------------- panel (a): economics --
+
+
+def _run_economics(workers: int, skew: float, *, shared: bool = True,
+                   seed: int = SEED):
+    """Real grouped commit of one wave of ``workers`` session groups on a
+    fresh counted Database; returns (txn economics, per-txn write sets,
+    per-txn attempts) — the latter two feed the trace synthesizer."""
+    d = Database(jit=False)
+    t = d.create_table("acct", RECORDS, payload_words=1,
+                       num_timestamps=8 * RECORDS)
+    t.seed(np.arange(RECORDS), np.arange(RECORDS).reshape(-1, 1))
+    sets = workloads.worker_write_sets(
+        workers, TXNS_PER_WORKER, WRITES_PER_TXN, RECORDS,
+        skew=skew, seed=seed, shared=shared)
+    groups = []
+    for wsets in sets:
+        g = []
+        for recs in wsets:
+            s = d.session().begin()
+            s.put("acct", recs,
+                  np.ones((len(recs), 1), np.uint32),
+                  read_cids=np.ones(len(recs), np.uint32))
+            g.append(s)
+        groups.append(g)
+    d.commit_grouped(groups, max_retries=MAX_RETRIES)
+    stats = dict(d.txn_stats)
+    attempts = [[s.attempts for s in g] for g in groups]
+    txn_ids = [[s.txn_id for s in g] for g in groups]
+    stats["attempts"] = stats["commits"] + stats["aborts"]
+    stats["abort_rate"] = stats["aborts"] / max(stats["attempts"], 1)
+    return stats, sets, attempts, txn_ids
+
+
+# ---------------------------------------------- panel (b): trace + sim --
+
+
+def _commit_trace(write_sets, attempts, txn_ids, shards, placement):
+    """Synthesize the grouped-commit wave (plus its retry rounds) as a
+    netsim trace.  Per worker-agent, per attempt round, each verb of the
+    commit protocol is ONE doorbell-batched call (the grouped commit
+    posts its whole per-shard buffer set off one setup, so per-call setup
+    latency must not multiply with the shard count), split into a
+    loopback part (dst == the worker's own node: skips the wire, still
+    pays the NIC — the locality win) and a remote part (rotating remote
+    dst; one-sided verbs contend on ports and source NICs, not receiver
+    CPUs).  Retry rounds re-emit their verbs behind the refresh READ and
+    a backoff ``compute`` event (what ``Database._backoff`` emits on a
+    traced transport); the grant exchange is ONE allgather round for the
+    whole coalesced wave — each participating node posts one doorbell
+    carrying the full grant vector (the group-commit saving the
+    economics panel measured for real).  Emitting it per node rather
+    than as a ``sim.ALL`` collective keeps the same per-node NIC cost
+    (1 msg + the vector's bytes) while putting W flows on the wire
+    instead of W*(W-1) — the discrete-event fair-share scan is
+    O(flows) per transition, so the collective expansion made W=64
+    points take minutes."""
+    events = []
+    seq = 0
+
+    def emit(verb, msgs, nbytes, agent, src, dst, compute_s=0.0):
+        nonlocal seq
+        events.append(sim.SimEvent(
+            seq=seq, verb=verb, msgs=float(msgs), nbytes=float(nbytes),
+            agent=agent, src=src, dst=dst, compute_s=compute_s))
+        seq += 1
+
+    def emit_split(verb, n_local, n_remote, row_bytes, agent, node):
+        if n_local:
+            emit(verb, n_local, n_local * row_bytes, agent, node, node)
+        if n_remote:
+            emit(verb, n_remote, n_remote * row_bytes, agent, node, None)
+
+    max_round = max((a for per_w in attempts for a in per_w), default=1)
+    for rnd in range(1, max_round + 1):
+        round_live = 0
+        live_nodes = set()
+        for w, (wsets, att, tids) in enumerate(
+                zip(write_sets, attempts, txn_ids)):
+            agent, node = f"w{w}", int(placement[w])
+            live = [i for i, a in enumerate(att) if a >= rnd]
+            if not live:
+                continue
+            round_live += len(live)
+            live_nodes.add(node)
+            recs = np.concatenate([np.asarray(wsets[i]).ravel()
+                                   for i in live])
+            homes = home_shard(recs, RECORDS, shards)
+            n_loc = int(np.sum(homes == node))
+            n_rem = int(recs.size - n_loc)
+            if rnd > 1:
+                worst = max(backoff_slots(tids[i] or 0, rnd - 1)
+                            for i in live)
+                if worst:
+                    emit("compute", 0, 0, agent, node, None,
+                         compute_s=worst * BACKOFF_SLOT_S)
+                emit_split("read", n_loc, n_rem, READ_BYTES, agent, node)
+            emit_split("cas", n_loc, n_rem, CAS_BYTES, agent, node)
+            emit_split("write", n_loc, n_rem, ROW_BYTES, agent, node)
+        for node in sorted(live_nodes):
+            emit("exchange", 1, 4 * round_live, "grant", node, None)
+    return events
+
+
+def _throughput(profile, write_sets, attempts, txn_ids, commits, *,
+                shards, placement):
+    trace = _commit_trace(write_sets, attempts, txn_ids, shards, placement)
+    res = sim.FabricSim(profile, nodes=shards, window=AGENT_WINDOW,
+                        windows={"grant": 0}).run(trace)
+    return commits / res.makespan, res
+
+
+# -------------------------------------------------------------- figure --
+
+
+def run(profiles=None, timed=False):
+    profiles = tuple(profiles) if profiles else DEFAULT_PROFILES
+    # FIG_SCALE_SMALL=1 (make bench-smoke): same panels, same assertions,
+    # fewer sweep points — the schema check, not the committed curve
+    small = bool(os.environ.get("FIG_SCALE_SMALL"))
+    workers = (4, 8, 32) if small else WORKERS
+    skews = ({"uniform": 0.0, "zipf12": 1.2} if small else SKEWS)
+    rows = []
+
+    # panel (a): economics once per (skew, workers) — profile-independent
+    econ = {}
+    for sname, s in skews.items():
+        econ[sname] = {W: _run_economics(W, s) for W in workers}
+    abort_rate = {sname: {str(W): econ[sname][W][0]["abort_rate"]
+                          for W in workers} for sname in skews}
+    retries = {sname: {str(W): econ[sname][W][0]["retries"]
+                       for W in workers} for sname in skews}
+    for sname in skews:
+        for W in workers:
+            st = econ[sname][W][0]
+            rows.append((f"fig_scale/econ_{sname}_w{W}", 0.0,
+                         f"commits_{st['commits']}_aborts_{st['aborts']}"
+                         f"_retries_{st['retries']}"))
+    for W in workers:
+        uni = econ["uniform"][W][0]["abort_rate"]
+        hot = econ["zipf12"][W][0]["abort_rate"]
+        # acceptance (a): skew costs aborts at every scale
+        assert hot > uni, \
+            (f"w{W}: zipf12 abort rate {hot:.3f} not above "
+             f"uniform {uni:.3f}")
+
+    # panel (b): throughput vs workers, per profile, per skew
+    throughput = {}
+    for pname in profiles:
+        prof = netsim.get_profile(pname)
+        curves = {}
+        for sname in skews:
+            curve = {}
+            for W in workers:
+                st, sets, att, tids = econ[sname][W]
+                ident = assign_workers(W, W, locality=True)
+                tput, _ = _throughput(prof, sets, att, tids,
+                                      st["commits"], shards=W,
+                                      placement=ident)
+                curve[str(W)] = tput
+                rows.append((f"fig_scale/{pname}_{sname}_w{W}",
+                             1e6 / tput, f"{tput:,.0f}tps"))
+            curves[sname] = curve
+        throughput[pname] = curves
+        up_uni = curves["uniform"]["32"] / curves["uniform"]["4"]
+        up_hot = curves["zipf12"]["32"] / curves["zipf12"]["4"]
+        # acceptance (b): near-linear uncontended, abort-driven flattening
+        assert up_uni >= 3.0, \
+            f"{pname}: uniform 4->32 workers only {up_uni:.2f}x"
+        assert up_hot < up_uni, \
+            (f"{pname}: zipf12 growth {up_hot:.2f}x not below "
+             f"uniform {up_uni:.2f}x")
+        rows.append((f"fig_scale/{pname}_scaling", 0.0,
+                     f"uniform_{up_uni:.1f}x_zipf12_{up_hot:.1f}x"))
+
+    # panel (c): locality toggle on the home-affine skewed workload
+    W = 32
+    st, sets, att, tids = _run_economics(W, SKEWS["zipf12"], shared=False)
+    locality = {}
+    for pname in profiles:
+        prof = netsim.get_profile(pname)
+        pts = {}
+        for loc in (True, False):
+            placement = assign_workers(W, W, locality=loc)
+            tput, _ = _throughput(prof, sets, att, tids, st["commits"],
+                                  shards=W, placement=placement)
+            frac = float(np.mean([local_fraction(
+                np.asarray(sets[w]).ravel(), placement[w], RECORDS, W)
+                for w in range(W)]))
+            pts["on" if loc else "off"] = {"tps": tput,
+                                           "local_fraction": frac}
+            rows.append((f"fig_scale/{pname}_locality_"
+                         f"{'on' if loc else 'off'}", 1e6 / tput,
+                         f"{tput:,.0f}tps_local{frac:.2f}"))
+        locality[pname] = pts
+        if prof.rdma:
+            # acceptance (c): placement alone buys throughput under skew
+            assert pts["on"]["tps"] > pts["off"]["tps"], \
+                (f"{pname}: locality on {pts['on']['tps']:.0f} <= "
+                 f"off {pts['off']['tps']:.0f}")
+
+    extras = {"workers": list(workers),
+              "skews": dict(skews),
+              "throughput": throughput,
+              "abort_rate": abort_rate,
+              "retries": retries,
+              "locality": locality,
+              "txn": econ["zipf12"][max(workers)][0]}
+    extras["txn"] = {k: v for k, v in extras["txn"].items()
+                     if not isinstance(v, (list, np.ndarray))}
+    if timed:
+        prof0 = netsim.get_profile(profiles[0])
+        st, sets, att, tids = econ["zipf12"][32]
+        ident = assign_workers(32, 32, locality=True)
+        measured = {
+            "fig_scale/grouped_commit_32w": timing.device_time_s(
+                lambda: _run_economics(32, SKEWS["zipf12"]),
+                warmup=1, k=3),
+            "fig_scale/sim_curve_point": timing.device_time_s(
+                lambda: _throughput(prof0, sets, att, tids,
+                                    st["commits"], shards=32,
+                                    placement=ident), warmup=1, k=3),
+        }
+        extras["measured_s"] = measured
+    return rows, extras

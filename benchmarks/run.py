@@ -42,7 +42,8 @@ import os
 import sys
 
 from benchmarks import (fig2_microbench, fig6_rsi, fig7_costmodel,
-                        fig8a_joins, fig8b_agg, fig9_ml, fig10_contention)
+                        fig8a_joins, fig8b_agg, fig9_ml, fig10_contention,
+                        fig_scale)
 from repro.fabric import netsim
 
 MODULES = {
@@ -53,13 +54,15 @@ MODULES = {
     "fig8b": fig8b_agg,
     "fig9": fig9_ml,
     "fig10": fig10_contention,
+    "fig_scale": fig_scale,
 }
 
 
 def _figure_key(name: str):
-    """Numeric figure order: fig2 ... fig9, fig10 (not lexicographic)."""
+    """Numeric figure order: fig2 ... fig9, fig10, then the unnumbered
+    (ours) figures like fig_scale (not lexicographic)."""
     digits = "".join(c for c in name if c.isdigit())
-    return (int(digits) if digits else 0, name)
+    return (int(digits) if digits else 99, name)
 
 
 def _run_module(mod, profiles, timed):

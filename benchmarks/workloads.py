@@ -1,0 +1,92 @@
+"""Deterministic Zipf transaction workloads (the fig_scale key streams).
+
+*The End of a Myth* runs its million-transaction curves under Zipf-skewed
+key popularity because uniform OLTP hides the thing that actually limits
+scale-out: hot-row conflicts.  This module generates those key streams
+for fig_scale with two hard rules:
+
+  * **All randomness is host-side, seeded, at setup time** —
+    ``np.random.default_rng(seed)`` draws happen while the workload is
+    *built*; nothing in a jitted commit path ever consults an RNG (the
+    fabric-check no-host-transfer / determinism story, and the reason a
+    fig_scale run is bit-reproducible).
+  * **Inverse-CDF sampling over explicit rank weights** — the empirical
+    frequency of rank r tracks ``r^-s`` by construction, which
+    ``tests/test_workloads.py`` pins with a chi-square-style tolerance.
+
+Two access patterns, matching the two fig_scale panels:
+
+  ``shared=True``  — every worker draws from ONE global Zipf over the
+                     whole table: rank-1 is the same record for everyone,
+                     so skew turns directly into cross-worker write-write
+                     conflicts (the abort-economics panel).
+  ``shared=False`` — TPC-C-style home affinity: worker ``w`` draws from a
+                     Zipf over its own contiguous key range (its "home
+                     warehouse"), so its hot keys are *its shard's* keys.
+                     The workload is identical under either placement of
+                     ``repro.db.assign_workers`` — only src→dst distance
+                     changes, which is what the locality panel prices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["zipf_weights", "zipf_keys", "worker_write_sets"]
+
+
+def zipf_weights(n: int, s: float) -> np.ndarray:
+    """Normalized Zipf pmf over ranks 1..n: P(rank r) ∝ r^-s (s=0 is
+    uniform).  Rank 1 == key 0: the hottest key is the lowest id, so a
+    range-partitioned table keeps each stream's hot head in one shard."""
+    n = int(n)
+    if n < 1:
+        raise ValueError("need at least one key")
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** -float(s)
+    return w / w.sum()
+
+
+def zipf_keys(num: int, n: int, s: float, *, seed: int = 0,
+              base: int = 0) -> np.ndarray:
+    """``num`` keys in [base, base+n) by inverse-CDF over
+    :func:`zipf_weights` — one vectorized ``rng.random`` draw at setup
+    time, deterministic in ``seed``, no RNG anywhere near a jitted path."""
+    rng = np.random.default_rng(seed)
+    u = rng.random(int(num))
+    if s <= 0.0:
+        keys = np.minimum((u * n).astype(np.int64), n - 1)
+    else:
+        cdf = np.cumsum(zipf_weights(n, s))
+        cdf[-1] = 1.0                      # guard fp round-off at the tail
+        keys = np.searchsorted(cdf, u, side="right").astype(np.int64)
+    return keys + int(base)
+
+
+def worker_write_sets(num_workers: int, txns_per_worker: int,
+                      writes_per_txn: int, num_records: int, *,
+                      skew: float = 0.0, seed: int = 0,
+                      shared: bool = True) -> list:
+    """Per-worker transaction write sets: a list of ``num_workers`` int
+    arrays of shape (txns_per_worker, writes_per_txn), records distinct
+    *within* each transaction (a txn CASes each of its rows once).
+
+    shared=True draws every worker from one global Zipf (cross-worker
+    hot-row contention); shared=False gives worker ``w`` a Zipf over its
+    own home range of ``num_records // num_workers`` keys (home-affine —
+    the locality panel's workload).  Worker streams get decorrelated,
+    deterministic per-worker seeds derived from ``seed``."""
+    num_workers = int(num_workers)
+    R = int(num_records)
+    wpt = int(writes_per_txn)
+    rpw = max(R // num_workers, wpt)
+    out = []
+    for w in range(num_workers):
+        n, base = (R, 0) if shared else (min(rpw, R), min(w * rpw, R - rpw))
+        rng = np.random.default_rng([int(seed), w])
+        p = None if skew <= 0.0 else zipf_weights(n, skew)
+        sets = np.empty((int(txns_per_worker), wpt), np.int64)
+        for t in range(int(txns_per_worker)):
+            # distinct rows per txn, still Zipf-weighted across txns
+            sets[t] = rng.choice(n, size=wpt, replace=False, p=p)
+        out.append(sets + base)
+    return out

@@ -84,7 +84,7 @@ jax.tree_util.register_dataclass(
 
 
 def commit(store, txns: TxnBatch, *, transport=None, priority=None,
-           chunks: int = 1, region_ns: str = ""):
+           chunks: int = 1, exchange_chunks: int = 1, region_ns: str = ""):
     """Commit a batch of concurrent transactions over a fabric transport.
     Returns (committed (T,) bool, new_store).
 
@@ -98,6 +98,10 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
       ties fall back to routed-buffer position, which favors lower peers.
     chunks: pipeline the routed prepare/install buffers (selective
       signaling); must divide T*W per shard.
+    exchange_chunks: pipeline the grant exchange the same way (one
+      doorbell per chunk) — :func:`commit_grouped` sets this to the group
+      size so the coalesced wave's per-chunk message counts stay
+      bit-identical to the solo commits it replaces.
     region_ns: region-name prefix (e.g. ``"acct/"``) for the schedule
       recorder when one is attached to the transport; a wave boundary is
       recorded so the race detector's lock-protocol rule can tie install
@@ -147,7 +151,8 @@ def commit(store, txns: TxnBatch, *, transport=None, priority=None,
         # ---- grants return to requesters (paired reverse exchange lands
         # each response in the slot it was sent from); the grant bit
         # crosses the collective in the packed u32 wire width
-        grant = transport.exchange(ok.astype(jnp.uint32)).astype(jnp.int32)
+        grant = transport.exchange(ok.astype(jnp.uint32),
+                                   exchange_chunks).astype(jnp.int32)
         granted = jnp.zeros((Tl * W,), jnp.int32).at[res.sent["slot"]].add(
             grant * res.sent_valid)
         gmat = granted.reshape(Tl, W) > 0
@@ -355,6 +360,136 @@ def commit_pipelined(store, waves, *, transport=None, priority=None,
     txn_ok, (words, payload, cids, bitvec) = list(out[:K]), out[K:]
     return txn_ok, {"words": words, "payload": payload, "cids": cids,
                     "bitvec": bitvec}
+
+
+def concat_group(groups, priority=None):
+    """Coalesce K per-session :class:`TxnBatch`es into ONE batch.
+
+    Write slots are padded to the group's widest W (record -1 = unused, so
+    padding never reaches the wire's valid lanes), batches are stacked
+    along T, and the default priority is the global row order — session
+    order inside the group is arbitration order, exactly the order K solo
+    commits would run in.  Returns (batch, priority (T,) int32, sizes) with
+    ``sizes[i]`` = rows contributed by ``groups[i]`` (for splitting the
+    grouped ``txn_ok`` back per session).
+    """
+    if not groups:
+        raise ValueError("concat_group needs at least one TxnBatch")
+    W = max(g.write_recs.shape[1] for g in groups)
+
+    def pad(a, fill, width=W):
+        t, w = a.shape[0], a.shape[1]
+        if w == width:
+            return a
+        shape = (t, width - w) + a.shape[2:]
+        return jnp.concatenate([a, jnp.full(shape, fill, a.dtype)], axis=1)
+
+    batch = TxnBatch(
+        write_recs=jnp.concatenate([pad(g.write_recs, -1) for g in groups]),
+        read_cids=jnp.concatenate([pad(g.read_cids, 0) for g in groups]),
+        new_payload=jnp.concatenate(
+            [pad(g.new_payload, 0) for g in groups]),
+        cid=jnp.concatenate([g.cid for g in groups]))
+    sizes = [int(g.write_recs.shape[0]) for g in groups]
+    if priority is None:
+        priority = jnp.arange(sum(sizes), dtype=jnp.int32)
+    else:
+        priority = jnp.concatenate(
+            [jnp.asarray(p, jnp.int32) for p in priority])
+    return batch, priority, sizes
+
+
+def _group_chunks(groups, chunks):
+    """Doorbell count of a grouped round: one pipelined chunk per session
+    (so the coalesced buffers post the same per-chunk wire messages K solo
+    commits would), degrading to 1 when the group's slot count does not
+    split evenly (unequal session sizes pad the capacity buffers)."""
+    if chunks is not None:
+        return int(chunks)
+    K = len(groups)
+    W = max(g.write_recs.shape[1] for g in groups)
+    slots = sum(int(g.write_recs.shape[0]) for g in groups) * W
+    return K if K and slots % K == 0 else 1
+
+
+def commit_grouped(store, groups, *, transport=None, priority=None,
+                   chunks=None, region_ns: str = ""):
+    """Group commit (NAM-DB §4.2 at scale): coalesce K logical sessions'
+    transaction batches into ONE routed prepare/install round trip.
+
+    The group travels as a single :class:`TxnBatch` (:func:`concat_group`)
+    through :func:`commit`: the write set is binned to home shards ONCE
+    (one ``plan_route``, reused by the install round) and the prepare /
+    grant / install rounds fire once for the whole group instead of once
+    per session — 3 collective round trips and 1 plan build total, where K
+    solo commits pay 3K and K.  The wire traffic itself is unchanged: the
+    coalesced buffers pipeline in K chunks (one doorbell per session), so
+    per-verb message and byte totals are bit-identical to the K solo
+    commits (capacity counting is linear in slots — holds whenever the
+    sessions share one W, e.g. a packed wave).
+
+    Outcome parity (guarded by ``tests/test_scale.py``): for wave-consistent
+    groups — every session snapshotted before the group commits, conflicts
+    arbitrated by group order — the committed masks, store words, payload,
+    cids and bitvector are bit-identical to committing each session alone
+    in order.  The one divergence is deliberate: a session that loses a
+    hot row to an *earlier* session that itself aborts stays aborted here
+    (it conflicted with a concurrent writer — legal SI), where the solo
+    schedule would have admitted it; the retry loop
+    (``db.Database.commit(max_retries=)``), not intra-round cascade
+    resolution, recovers those — cascades would cost extra grant rounds
+    and break the 3-collective budget ``fabric.check`` enforces.
+
+    groups: list of :class:`TxnBatch` (one per logical session, or one per
+      worker's session stream).  priority: optional list of per-group
+      priorities (default: global row order across the group).
+    Returns (list of per-group txn_ok, new_store).
+    """
+    gch = _group_chunks(groups, chunks)
+    batch, prio, sizes = concat_group(groups, priority)
+    ok, store = commit(store, batch, transport=transport, priority=prio,
+                       chunks=gch, exchange_chunks=gch,
+                       region_ns=region_ns)
+    return _split_sizes(ok, sizes), store
+
+
+def commit_grouped_pipelined(store, grouped_waves, *, transport=None,
+                             chunks=None, region_ns: str = ""):
+    """Group commit composed with the async pipeline: each wave is a
+    *group* of session batches (coalesced per :func:`concat_group`), and
+    wave N+1's grouped prepare route goes on the wire while wave N's
+    grouped install is still in flight (:func:`commit_pipelined`'s
+    explicit ``Completion.wait()`` fences carry the ordering — the race
+    detector records the composition clean, 3 collectives per wave).
+
+    grouped_waves: list of lists of :class:`TxnBatch`.
+    Returns (list of lists of per-group txn_ok, new_store).
+    """
+    if not grouped_waves:
+        return [], store
+    batches, prios, sizes = [], [], []
+    for groups in grouped_waves:
+        b, p, s = concat_group(groups)
+        batches.append(b)
+        prios.append(p)
+        sizes.append(s)
+    wave_chunks = ({_group_chunks(g, chunks) for g in grouped_waves}
+                   or {1})
+    # commit_pipelined shares one chunks= across waves; mixed group
+    # shapes fall back to unpipelined buffers rather than mis-splitting
+    ch = wave_chunks.pop() if len(wave_chunks) == 1 else 1
+    oks, store = commit_pipelined(store, batches, transport=transport,
+                                  priority=prios, chunks=ch,
+                                  region_ns=region_ns)
+    return [_split_sizes(ok, s) for ok, s in zip(oks, sizes)], store
+
+
+def _split_sizes(arr, sizes):
+    out, off = [], 0
+    for s in sizes:
+        out.append(arr[off:off + s])
+        off += s
+    return out
 
 
 def read_snapshot(store, recs, rid, *, transport=None, region_ns: str = ""):

@@ -17,7 +17,8 @@ are the same system, per the paper's central redesign:
 
 New workloads become plans against tables — not bespoke transport plumbing.
 """
-from repro.db.database import Database, Explain, QueryResult
+from repro.db.database import Database, Explain, QueryResult, backoff_slots
+from repro.db.partition import assign_workers, home_shard, local_fraction
 from repro.db.plan import Plan
 from repro.db.planner import AGG_VARIANTS, JOIN_VARIANTS, Alternative, \
     Planner
@@ -28,4 +29,5 @@ __all__ = [
     "Database", "Explain", "QueryResult", "Plan",
     "Planner", "Alternative", "JOIN_VARIANTS", "AGG_VARIANTS",
     "Session", "ISOLATION_LEVELS", "Table", "TableSchema",
+    "assign_workers", "home_shard", "local_fraction", "backoff_slots",
 ]

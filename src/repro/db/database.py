@@ -44,6 +44,29 @@ DEFAULT_MODEL_NODES = 4
 
 _BACKENDS = {"rsi": rsi.commit, "2pc": twopc.commit}
 
+# one backoff slot of modeled compute between a hot-row abort and its
+# retry round — a NIC doorbell-ish quantum, priced via the sim tracer
+BACKOFF_SLOT_S = 1e-6
+
+
+def _dyadic(items: list) -> list:
+    """Split a list into greedy power-of-two-sized chunks (23 -> 16+4+2+1)."""
+    out, i = [], 0
+    while i < len(items):
+        size = 1 << ((len(items) - i).bit_length() - 1)
+        out.append(items[i:i + size])
+        i += size
+    return out
+
+
+def backoff_slots(txn_id: int, attempt: int) -> int:
+    """Bounded-exponential retry backoff, jittered by a Fibonacci-hash of
+    the transaction id — deterministic (no runtime RNG, replayable traces)
+    yet decorrelated across the txns that just collided on the same hot
+    row, which is the whole point of jitter."""
+    h = (int(txn_id) * 0x9E3779B1 + int(attempt) * 0x85EBCA77) & 0xFFFFFFFF
+    return h % (1 << min(int(attempt), 16))
+
 
 @dataclass(frozen=True)
 class QueryResult:
@@ -83,12 +106,18 @@ class Database:
     """Tables + sessions + planner over one fabric transport."""
 
     def __init__(self, transport=None, *, net="rdma",
-                 model_nodes: Optional[int] = None):
+                 model_nodes: Optional[int] = None, jit: bool = True):
         """net: what the planner models the wire as — a
         :class:`~repro.fabric.NetworkProfile`, a preset name
         ("ethernet_1g" ... "rdma_edr"), or a legacy key; see
-        docs/netsim.md."""
+        docs/netsim.md.
+
+        jit=False runs commit bodies eagerly — the right trade for
+        workloads that commit many *distinctly-shaped* one-off waves
+        (fig_scale's worker sweep), where per-shape compile time dwarfs
+        the device work; steady-shape serving keeps the default."""
         self.transport = transport or fabric.LocalTransport()
+        self._jit = bool(jit)
         self.pool = fabric.NamPool()
         nodes = (model_nodes if model_nodes is not None else
                  (self.transport.n if self.transport.n > 1
@@ -99,6 +128,10 @@ class Database:
         self.pool.alloc("oracle/clock", (1,), jnp.uint32, ("replicated",))
         self._clock = jnp.full((1,), 2, jnp.uint32)
         self._jit_cache: dict = {}
+        # per-txn outcome economics (commit/abort/retry counts — the
+        # contention side of the ledger the wire counters can't see)
+        self.txn_stats = {"commits": 0, "aborts": 0, "retries": 0,
+                          "backoff_slots": 0}
 
     # ------------------------------------------------------------ tables --
 
@@ -160,11 +193,28 @@ class Database:
                                  region_ns=f"{t.schema.name}/")
 
     def commit(self, sessions: List[Session], *, chunks: int = 1,
-               priority=None) -> np.ndarray:
+               priority=None, max_retries: int = 0) -> np.ndarray:
         """Commit a wave of concurrent sessions as ONE batched fabric
         commit (one routed prepare + one routed install round trip; both
         rounds reuse a single RoutePlan — the wave is binned to home
-        shards once).  Returns the per-session committed mask."""
+        shards once).  Returns the per-session committed mask.
+
+        max_retries: re-run aborted writers up to this many extra rounds.
+        Each retry waits out :func:`backoff_slots` (deterministic jitter by
+        txn id — replayable, no runtime RNG; priced as sim compute when a
+        tracer is attached), re-reads its write set's current versions
+        (counted READs, *after* the abort round's commit-complete fence)
+        and revalidates against them with a fresh cid.  Outcomes land in
+        ``txn_stats`` / the ``"txn"`` entry of :meth:`fabric_stats`."""
+        if not sessions:
+            return np.zeros((0,), bool)
+        self._commit_wave(sessions, chunks=chunks, priority=priority)
+        self._retry_losers(sessions, chunks=chunks, max_retries=max_retries)
+        return np.asarray([bool(s.committed) for s in sessions], bool)
+
+    def _commit_wave(self, sessions: List[Session], *, chunks: int = 1,
+                     priority=None) -> np.ndarray:
+        """One commit round for one wave — no retries, no accounting."""
         if not sessions:
             return np.zeros((0,), bool)
         isolation = sessions[0].isolation
@@ -199,10 +249,149 @@ class Database:
                 t.store["bitvec"], jnp.asarray(cids, jnp.int32),
                 jnp.ones((T,), bool), region=f"{t.schema.name}/bitvec")
         ok = np.asarray(ok)
-        for s, committed, cid in zip(sessions, ok, cids):
+        self._assign_outcomes(sessions, ok, cids)
+        return np.asarray([s.committed for s in wave], bool)
+
+    def _assign_outcomes(self, sessions, ok, cids):
+        for s, committed, cid in zip(sessions, np.asarray(ok), cids):
             s.committed = bool(committed)
             s.cid = int(cid)
-        return np.asarray([s.committed for s in wave], bool)
+            s.attempts += 1
+            if s.txn_id is None:
+                # stable retry identity: the txn's FIRST claimed cid
+                # (globally unique — retries claim fresh cids but keep
+                # jittering off this one)
+                s.txn_id = int(cid)
+
+    # ------------------------------------------------- retry economics --
+
+    def _retry_losers(self, sessions: List[Session], *, chunks: int,
+                      max_retries: int):
+        """Bounded retry loop over a wave's aborted writers + outcome
+        accounting for the whole wave (commits include read-only txns)."""
+        losers = [s for s in sessions
+                  if s.table_name is not None and not s.committed]
+        self.txn_stats["aborts"] += len(losers)
+        attempt = 1
+        while losers and attempt <= max_retries:
+            self._backoff(losers, attempt)
+            self._refresh_losers(losers)
+            self.txn_stats["retries"] += len(losers)
+            # dyadic chunking: retry waves run in power-of-two sizes so
+            # the whole sweep's wave shapes form a tiny closed set and the
+            # jit / eager op caches stay warm (loser counts are otherwise
+            # all distinct).  A chunk-2 txn that loses a row to chunk 1
+            # just fails validation and burns this attempt — the same
+            # bounded-retry semantics, one round later.
+            for chunk in _dyadic(losers):
+                self._commit_wave(chunk, chunks=chunks)
+            losers = [s for s in losers if not s.committed]
+            self.txn_stats["aborts"] += len(losers)
+            attempt += 1
+        self.txn_stats["commits"] += sum(bool(s.committed) for s in sessions)
+
+    def _refresh_losers(self, losers: List[Session]):
+        """Batched retry refresh: ONE counted READ re-fetches the current
+        lock|CID word of every loser's write set (the retry wave pays one
+        verb, not one per session — same coalescing argument as group
+        commit), then each session revalidates against its slice.  Issued
+        after the losing round's commit-complete fence, which is what
+        makes the retry race-free (``fabric.check`` has the seeded
+        counterexample).  Equivalent to per-session
+        :meth:`Session.refresh_read_cids`."""
+        t = self.table(losers[0].table_name)
+        per = [np.concatenate(s._recs) for s in losers]
+        words = self.transport.read(
+            t.store["words"], jnp.asarray(np.concatenate(per), jnp.int32),
+            region=f"{t.schema.name}/words")
+        fresh = np.asarray(words, np.uint32) & np.uint32(int(rsi.CID_MASK))
+        rid = self.read_timestamp()
+        off = 0
+        for s, recs in zip(losers, per):
+            k = recs.shape[0]
+            s._recs = [recs]
+            s._payload = [np.concatenate(s._payload)]
+            s._read_cids = [fresh[off:off + k]]
+            s.rid = rid
+            off += k
+
+    def _backoff(self, losers: List[Session], attempt: int):
+        slots = sum(backoff_slots(s.txn_id or 0, attempt) for s in losers)
+        self.txn_stats["backoff_slots"] += slots
+        tracer = getattr(self.transport, "tracer", None)
+        if tracer is not None and slots:
+            # losers back off concurrently: the wave waits out the LONGEST
+            # jitter, not the sum (the sum is the economics counter above)
+            worst = max(backoff_slots(s.txn_id or 0, attempt)
+                        for s in losers)
+            tracer.emit_compute(worst * BACKOFF_SLOT_S)
+
+    def commit_grouped(self, groups: List[List[Session]], *,
+                       chunks: Optional[int] = None, priority=None,
+                       max_retries: int = 0) -> List[np.ndarray]:
+        """Commit K per-worker session groups as ONE coalesced RSI wave
+        (:func:`repro.core.rsi.commit_grouped`): one RoutePlan build and
+        one prepare/install/grant collective triple for the whole group,
+        with per-chunk doorbells keeping the wire message counts
+        bit-identical to K solo :meth:`commit` calls.  Timestamps are
+        claimed group-by-group, so cid assignment matches the sequential
+        order too.  Returns the per-group committed masks; retry
+        semantics as in :meth:`commit` (losers across all groups retry
+        together as plain waves)."""
+        groups = [list(g) for g in groups]
+        flat = [s for g in groups for s in g]
+        if not flat:
+            return [np.zeros((0,), bool) for _ in groups]
+        if any(s.isolation != "rsi" for s in flat):
+            raise ValueError("commit_grouped is RSI-only")
+        for s in flat:
+            if s.table_name is None:
+                s.committed = True
+        writer_groups = [[s for s in g if s.table_name is not None]
+                         for g in groups]
+        writer_groups = [g for g in writer_groups if g]
+        if writer_groups:
+            names = {s.table_name for g in writer_groups for s in g}
+            if len(names) != 1:
+                raise ValueError(f"one table per grouped commit, "
+                                 f"got {names}")
+            t = self.table(names.pop())
+            packed = [self._pack_txns(t, g) for g in writer_groups]
+            batches = [txns for txns, _ in packed]
+            cids = np.concatenate([c for _, c in packed])
+            oks, t.store = self._jit_commit_grouped(
+                chunks, f"{t.schema.name}/", len(batches))(
+                t.store, batches,
+                None if priority is None else
+                [jnp.asarray(p, jnp.int32) for p in priority])
+            ok = np.concatenate([np.asarray(o) for o in oks])
+            if self.transport.n > 1:
+                # msg 3 completion for globally contiguous cids, as in
+                # :meth:`commit`
+                t.store["bitvec"] = self.transport.write(
+                    t.store["bitvec"], jnp.asarray(cids, jnp.int32),
+                    jnp.ones((len(cids),), bool),
+                    region=f"{t.schema.name}/bitvec")
+            self._assign_outcomes(
+                [s for g in writer_groups for s in g], ok, cids)
+        self._retry_losers(flat, chunks=1, max_retries=max_retries)
+        return [np.asarray([bool(s.committed) for s in g], bool)
+                for g in groups]
+
+    def _jit_commit_grouped(self, chunks, region_ns: str, K: int):
+        key = ("commit_grouped", K, chunks, region_ns)
+
+        def fn(store, batches, prio):
+            return rsi.commit_grouped(store, batches,
+                                      transport=self.transport,
+                                      priority=prio, chunks=chunks,
+                                      region_ns=region_ns)
+        if (not self._jit
+                or getattr(self.transport, "recorder", None) is not None):
+            return fn          # eager: exact recorded access intervals
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
 
     def _pack_txns(self, t: Table, sessions: List[Session]):
         """Batch one wave of writer sessions into a TxnBatch (T fixed W
@@ -227,7 +416,8 @@ class Database:
         return txns, cids
 
     def commit_pipelined(self, waves: List[List[Session]], *,
-                         chunks: int = 1) -> List[np.ndarray]:
+                         chunks: int = 1,
+                         max_retries: int = 0) -> List[np.ndarray]:
         """Commit K *dependent* session waves with wave i's install round
         trip overlapping wave i+1's prepare round trip
         (:func:`repro.core.rsi.commit_pipelined` — RSI only).  Semantically
@@ -270,9 +460,9 @@ class Database:
                         table.store["bitvec"], jnp.asarray(cids, jnp.int32),
                         jnp.ones((len(cids),), bool),
                         region=f"{table.schema.name}/bitvec")
-                for s, committed, cid in zip(sessions, np.asarray(ok), cids):
-                    s.committed = bool(committed)
-                    s.cid = int(cid)
+                self._assign_outcomes(sessions, ok, cids)
+        self._retry_losers([s for w in waves for s in w], chunks=chunks,
+                           max_retries=max_retries)
         return [np.asarray([s.committed for s in w], bool) for w in waves]
 
     def _jit_commit_pipelined(self, chunks: int, region_ns: str, K: int):
@@ -282,7 +472,8 @@ class Database:
             return rsi.commit_pipelined(store, txns_list,
                                         transport=self.transport,
                                         chunks=chunks, region_ns=region_ns)
-        if getattr(self.transport, "recorder", None) is not None:
+        if (not self._jit
+                or getattr(self.transport, "recorder", None) is not None):
             return fn          # eager: exact recorded access intervals
         if key not in self._jit_cache:
             self._jit_cache[key] = jax.jit(fn)
@@ -291,7 +482,8 @@ class Database:
     def _jit_commit(self, isolation: str, chunks: int, region_ns: str = ""):
         key = ("commit", isolation, chunks, region_ns)
         backend = _BACKENDS[isolation]
-        if getattr(self.transport, "recorder", None) is not None:
+        if (not self._jit
+                or getattr(self.transport, "recorder", None) is not None):
             # a schedule recorder needs concrete verb indices: run the
             # commit body eagerly (uncached) so the recorded access
             # intervals are exact, not whole-region conservative
@@ -462,5 +654,14 @@ class Database:
 
     def fabric_stats(self) -> dict:
         """Cumulative per-verb message/byte counters (trace-time; see
-        docs/fabric.md for semantics)."""
-        return self.transport.stats()
+        docs/fabric.md for semantics), plus a ``"txn"`` pseudo-verb with
+        the commit/abort/retry economics once any transaction has
+        committed through this database (msgs/bytes stay 0 — outcomes
+        aren't wire traffic; the wire side of a retry shows up under the
+        real verbs it reissues)."""
+        stats = dict(self.transport.stats())
+        if any(self.txn_stats.values()):
+            stats["txn"] = {"calls": self.txn_stats["commits"]
+                            + self.txn_stats["aborts"],
+                            "msgs": 0, "bytes": 0, **self.txn_stats}
+        return stats

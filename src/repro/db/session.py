@@ -40,8 +40,12 @@ class Session:
         self.db = db
         self.isolation = isolation
         self.rid: Optional[int] = None      # read snapshot timestamp
-        self.cid: Optional[int] = None      # assigned at commit
+        self.cid: Optional[int] = None      # assigned at commit (latest)
         self.committed: Optional[bool] = None
+        self.txn_id: Optional[int] = None   # first claimed cid — stable
+                                            # across retries (backoff
+                                            # jitter keys off it)
+        self.attempts: int = 0              # fabric commit rounds run
         self._table: Optional[str] = None   # single-table txn (v1)
         self._recs: list = []
         self._payload: list = []
@@ -55,6 +59,8 @@ class Session:
         self.rid = self.db.read_timestamp() if rid is None else int(rid)
         self.cid = None
         self.committed = None
+        self.txn_id = None
+        self.attempts = 0
         self._table, self._recs = None, []
         self._payload, self._read_cids = [], []
         return self
@@ -96,6 +102,28 @@ class Session:
         """Commit this transaction alone (a one-session wave). Batch many
         concurrent sessions with ``db.commit([s1, s2, ...])`` instead."""
         return bool(self.db.commit([self], **kw)[0])
+
+    def refresh_read_cids(self) -> "Session":
+        """Retry path after an abort: re-read the *current* committed
+        version of every buffered write record (ONE counted READ on the
+        table's word array — issued after the losing round's
+        commit-complete fence, which is what makes the retry race-free)
+        and revalidate the buffered writes against it.  The payload stays
+        as buffered — fig_scale's increments are idempotent re-applies;
+        an application would re-run its read-modify-write here."""
+        if self._table is None:
+            return self
+        t = self.db.table(self._table)
+        recs = np.concatenate(self._recs)
+        words = self.db.transport.read(t.store["words"],
+                                       jnp.asarray(recs, jnp.int32),
+                                       region=f"{t.schema.name}/words")
+        fresh = np.asarray(words, np.uint32) & np.uint32(int(rsi.CID_MASK))
+        self._recs = [recs]
+        self._payload = [np.concatenate(self._payload)]
+        self._read_cids = [fresh]
+        self.rid = self.db.read_timestamp()
+        return self
 
     # ---------------------------------------------------------- internals --
 

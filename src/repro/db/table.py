@@ -105,6 +105,18 @@ class Table:
         self.rows = max(self.rows, int(np.max(np.asarray(recs))) + 1)
         return self
 
+    # ------------------------------------------------------- partitioning --
+
+    def home_shard(self, recs, num_shards: int = None) -> np.ndarray:
+        """Home shard of each record under this table's declared
+        partitioning (default cluster size: the bound transport's).  The
+        same rule the RSI commit router bins by — callers (fig_scale's
+        locality axis) use it to place workers, not to route."""
+        from repro.db import partition
+        n = self._transport.n if num_shards is None else int(num_shards)
+        return partition.home_shard(recs, self.schema.num_records, n,
+                                    self.schema.partitioning)
+
     # ------------------------------------------------------------- stats --
 
     def stats(self) -> dict:

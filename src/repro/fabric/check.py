@@ -575,6 +575,17 @@ def check_schedule(rec: ScheduleRecorder, *,
                     ov = _overlap(c, w)
                     if ov is None:
                         continue
+                    if (c.agent == r.agent and rec.happens_before(r, c)
+                            and rec.happens_before(c, w)):
+                        # the agent's OWN atomic, program-ordered inside
+                        # its READ->WRITE window: the writer holds the
+                        # CAS result before writing, so nothing is lost
+                        # unknowingly (the retry loop's refresh READ ->
+                        # prepare CAS -> install WRITE).  Another agent's
+                        # atomic stays flagged even when fenced into the
+                        # window — the read predates it, so the write-
+                        # back still loses its value.
+                        continue
                     if not rec.happens_before(c, r) \
                             and not rec.happens_before(w, c):
                         emit("lost-update", region,
@@ -742,6 +753,30 @@ def lint_commit_pipelined(waves: int = 2) -> Report:
         target=f"rsi.commit_pipelined[waves={waves}]")
 
 
+def lint_commit_grouped(groups: int = 3) -> Report:
+    """Lint the group commit's trace: K coalesced session batches are
+    still ONE commit wave — 3 all_to_all sites TOTAL
+    (:func:`commit_all_to_all_budget` of one wave, not of K), sort-free,
+    host-free, packed wire.  This is the whole point of fig_scale's
+    tentpole: the chunked doorbells keep the wire traffic bit-identical
+    to K solo commits while the collective count collapses 3K -> 3."""
+    from repro.core import rsi
+    tp = _mesh_transport()
+    cfg = rsi.StoreCfg(num_records=16, payload_words=2, num_timestamps=64)
+    store = rsi.init_store(cfg)
+    gs = [rsi.TxnBatch(write_recs=jnp.zeros((2, 2), jnp.int32),
+                       read_cids=jnp.zeros((2, 2), jnp.uint32),
+                       new_payload=jnp.zeros((2, 2, 2), jnp.uint32),
+                       cid=jnp.arange(2 * g, 2 * g + 2, dtype=jnp.uint32))
+          for g in range(groups)]
+    rules = HOT_PATH_RULES + (
+        CollectiveBudget({"all_to_all": commit_all_to_all_budget(1)}),)
+    return lint_fn(
+        lambda s, g: rsi.commit_grouped(s, g, transport=tp),
+        store, gs, rules=rules,
+        target=f"rsi.commit_grouped[groups={groups}]")
+
+
 def lint_ps_push() -> Report:
     """Lint the parameter server's routed push body: one all_to_all,
     packed wire, sort-free."""
@@ -901,6 +936,38 @@ def record_pipelined_commit(waves: int = 2) -> ScheduleRecorder:
     return rec
 
 
+def record_grouped_commit(max_retries: int = 1) -> ScheduleRecorder:
+    """Run a contended group commit with bounded retry eagerly through a
+    recording transport and return the schedule.  Two worker groups hit
+    the same hot row, so the losing session retries: the retry's refresh
+    READ of the lock|CID words happens strictly AFTER the prior wave's
+    commit-complete fence (the grant exchange is a global fence), which
+    is why the schedule records clean — drop that ordering and the same
+    re-read races the winner's install WRITE (the seeded fixture in
+    ``tests/test_check.py``)."""
+    from repro.core import rsi
+    from repro.db import Database
+    from repro.fabric import LocalTransport
+    rec = ScheduleRecorder()
+    tp = LocalTransport()
+    tp.recorder = rec
+    db = Database(tp)
+    t = db.create_table("acct", 32, payload_words=2, num_timestamps=128)
+    t.seed(np.arange(8), vals=np.ones((8, 2), np.uint32))
+    rec.declare_locks("acct/words", ("acct/payload", "acct/cids"),
+                      lock_bit=int(rsi.LOCK_BIT))
+    groups = []
+    for w in range(2):
+        s = db.session().begin()
+        recs = [0, 4 + w]                   # record 0 is the hot row
+        pay, rc, _ = s.get("acct", recs)
+        s.put("acct", recs, np.asarray(pay) + w + 1,
+              read_cids=np.asarray(rc))
+        groups.append([s])
+    db.commit_grouped(groups, max_retries=max_retries)
+    return rec
+
+
 def race_sessions(isolation: str = "rsi") -> Report:
     return check_schedule(record_session_waves(isolation),
                           target=f"sessions/{isolation}")
@@ -924,6 +991,11 @@ def race_overlapped_route() -> Report:
 def race_pipelined_commit(waves: int = 2) -> Report:
     return check_schedule(record_pipelined_commit(waves),
                           target=f"rsi/pipelined[waves={waves}]")
+
+
+def race_grouped_commit(max_retries: int = 1) -> Report:
+    return check_schedule(record_grouped_commit(max_retries),
+                          target=f"rsi/grouped[retries={max_retries}]")
 
 
 # ------------------------------------------------------- CLI plumbing ----
@@ -952,6 +1024,13 @@ SUITES: Dict[str, Callable[[], List[Report]]] = {
                       lint_commit_pipelined(2),
                       race_overlapped_route(),
                       race_pipelined_commit()],
+    # group commit + abort/retry economics (docs/db.md "group commit"):
+    # K coalesced sessions stay inside ONE wave's 3-collective budget,
+    # and the contended grouped schedule — retry refresh READ behind the
+    # commit-complete fence — records race-clean
+    "scale": lambda: [lint_commit_grouped(3),
+                      lint_commit_grouped(1),
+                      race_grouped_commit(1)],
 }
 
 #: which check suites gate each paper figure (benchmarks/run.py --check).
@@ -963,6 +1042,7 @@ FIGURE_SUITES: Dict[str, Tuple[str, ...]] = {
     "fig8b": ("route", "verbs"),
     "fig9": ("paramserver", "route"),
     "fig10": ("sim", "route"),
+    "fig_scale": ("scale", "rsi"),
 }
 
 

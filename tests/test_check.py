@@ -409,3 +409,109 @@ def test_cli_exit_codes_reflect_violations(monkeypatch, capsys):
     monkeypatch.setitem(check.SUITES, "verbs", lambda: [bad])
     assert check.main(["--suite", "verbs", "-q"]) == 1
     capsys.readouterr()
+
+
+# ------------------- group commit + retry economics (ISSUE 9) ------------
+# The retry loop's ordering obligation: a loser may re-read the hot row's
+# lock|CID word ONLY after the wave that beat it has fully landed (the
+# grant exchange / commit-complete global fence).  Plus the grouped-commit
+# schedules and the 3K -> 3 collective collapse, pinned in both directions.
+
+def test_fixture_unfenced_retry_reread_races():
+    """A retrying session re-reads the hot row while the winner's install
+    WRITE is still unsignaled in flight: rw-race, naming the verb pair
+    and the region.  The clean twin waits for the commit-complete fence —
+    exactly what ``db.Database._refresh_losers`` gets for free by running
+    strictly after the grouped wave returns."""
+    rec, t = _rec_tp()
+    words = jnp.zeros((16,), jnp.uint32)
+    with rec.agent("winner"):                # install still in flight
+        t.write_async(words, jnp.array([0], jnp.int32),
+                      jnp.full((1,), 7, jnp.uint32), region="acct/words")
+    with rec.agent("retry"):                 # refresh re-read, no fence
+        t.read(words, jnp.array([0], jnp.int32), region="acct/words")
+    rep = check.check_schedule(rec, target="fixture-retry-unfenced")
+    assert [v.rule for v in rep.violations] == ["rw-race"]
+    v = rep.violations[0]
+    assert v.where == "acct/words"
+    assert "WRITE#0" in v.detail and "READ#1" in v.detail
+    # fenced twin: the wave's commit-complete barrier orders the re-read
+    rec, t = _rec_tp()
+    with rec.agent("winner"):
+        t.write_async(words, jnp.array([0], jnp.int32),
+                      jnp.full((1,), 7, jnp.uint32), region="acct/words")
+    rec.fence("commit-complete")             # the grant-exchange barrier
+    with rec.agent("retry"):
+        t.read(words, jnp.array([0], jnp.int32), region="acct/words")
+    assert check.check_schedule(rec).ok
+
+
+def test_own_cas_inside_rmw_window_is_not_lost_update():
+    """The retry shape: refresh READ -> prepare CAS -> install WRITE, all
+    one agent, program-ordered.  The agent's OWN atomic inside its
+    READ->WRITE window is not a lost update (the writer holds the CAS
+    result); another agent's atomic in the same window stays flagged even
+    when fences order it — the read predates it, so the write-back still
+    loses its value."""
+    rec, t = _rec_tp()
+    words = jnp.zeros((8,), jnp.uint32)
+    v = t.read(words, jnp.array([0], jnp.int32), region="acct/words")
+    t.cas(words, jnp.array([0], jnp.int32), v,
+          jnp.full((1,), LOCK, jnp.uint32), region="acct/words")
+    t.write(words, jnp.array([0], jnp.int32),
+            jnp.full((1,), 5, jnp.uint32), region="acct/words")
+    rep = check.check_schedule(rec, target="own-cas-rmw")
+    assert rep.ok, rep.render()
+    # other-agent atomic, globally fenced into the window: still lost
+    rec, t = _rec_tp()
+    with rec.agent("rmw"):
+        t.read(words, jnp.array([0], jnp.int32), region="acct/words")
+    rec.fence("round")
+    with rec.agent("bumper"):
+        t.fetch_add(words, jnp.array([0], jnp.int32),
+                    jnp.ones((1,), jnp.uint32), region="acct/words")
+    rec.fence("round")
+    with rec.agent("rmw"):
+        t.write(words, jnp.array([0], jnp.int32),
+                jnp.full((1,), 5, jnp.uint32), region="acct/words")
+    rep = check.check_schedule(rec, target="foreign-atomic-rmw")
+    assert "lost-update" in [v.rule for v in rep.violations]
+
+
+def test_grouped_commit_schedule_records_clean():
+    rec = check.record_grouped_commit(max_retries=1)
+    assert any(a.verb == "READ" and a.region == "acct/words"
+               for a in rec.accesses), "retry refresh READ must appear"
+    assert sum(a.verb == "CAS" and a.region == "acct/words"
+               for a in rec.accesses) >= 2, "initial + retry prepare"
+    rep = check.race_grouped_commit(max_retries=1)
+    assert rep.ok, rep.render()
+
+
+def test_grouped_commit_budget_collapse_both_directions():
+    """K coalesced sessions stay inside ONE wave's 3-collective budget
+    (the 3K -> 3 collapse fig_scale's economics panel measures), and a
+    budget of 2 rejects the same trace — the lint is sharp, not vacuous."""
+    rep = check.lint_commit_grouped(groups=3)
+    assert rep.ok, rep.render()
+    from repro.core import rsi
+    tp = check._mesh_transport()
+    cfg = rsi.StoreCfg(num_records=16, payload_words=2, num_timestamps=64)
+    store = rsi.init_store(cfg)
+    gs = [rsi.TxnBatch(write_recs=jnp.zeros((2, 2), jnp.int32),
+                       read_cids=jnp.zeros((2, 2), jnp.uint32),
+                       new_payload=jnp.zeros((2, 2, 2), jnp.uint32),
+                       cid=jnp.arange(2 * g, 2 * g + 2, dtype=jnp.uint32))
+          for g in range(3)]
+    bad = check.lint_fn(
+        lambda s, g: rsi.commit_grouped(s, g, transport=tp), store, gs,
+        rules=[check.CollectiveBudget({"all_to_all": 2})],
+        target="grouped-under-tight-budget")
+    assert not bad.ok
+    assert "3 all_to_all site(s) traced, budget is 2" in \
+        bad.violations[0].detail
+
+
+def test_scale_suite_registered():
+    assert "scale" in check.SUITES
+    assert check.FIGURE_SUITES["fig_scale"] == ("scale", "rsi")

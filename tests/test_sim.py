@@ -389,3 +389,65 @@ def test_database_stats_delta_survives_new_counters():
     assert r.stats                               # delta computed, no crash
     for verb, s in r.stats.items():
         assert isinstance(s.get("queue_hist", {}), dict)
+
+
+# --------------------- fig_scale grouped-commit anchors (ISSUE 9) --------
+# The synthesized grouped-commit trace (real economics from a counted
+# grouped Database commit, re-priced by the simulator) obeys the same two
+# laws every hand-built trace does: strictly serialized it IS the analytic
+# serial sum, and doubling the workers that split a fixed uncontended
+# workload ~halves the simulated wall-clock.
+
+
+def _econ_trace_serial(workers=2):
+    """A real zipf(1.2) grouped-commit trace (retries, backoff computes,
+    grant rounds) re-attributed to ONE agent on a node OFF every home
+    shard: no loopback events (a loopback skips the wire, which the
+    serial analytic sum does not model), one strictly serial issuer."""
+    import dataclasses as dc
+
+    from benchmarks import fig_scale
+    st, sets, att, tids = fig_scale._run_economics(workers, 1.2, seed=3)
+    shards = 2
+    off_node = shards                      # one node past the home shards
+    trace = fig_scale._commit_trace(sets, att, tids, shards,
+                                    [off_node] * workers)
+    assert any(e.verb == "compute" for e in trace), "retry backoff missing"
+    assert any(e.verb == "read" for e in trace), "refresh READ missing"
+    return [dc.replace(e, agent="a") for e in trace], shards + 1
+
+
+def test_grouped_commit_trace_window1_equals_analytic_serial_sum():
+    trace, nodes = _econ_trace_serial()
+    serial = sim.analytic_time(trace, EDR)
+    res = sim.FabricSim(EDR, nodes=nodes, window=1).run(trace)
+    assert res.makespan == pytest.approx(serial, rel=1e-12)
+    assert len(res.completions) == len(trace)
+
+
+def _uncontended_trace(workers, txns_per_worker, shards=8):
+    from benchmarks import fig_scale, workloads
+    sets = workloads.worker_write_sets(workers, txns_per_worker, 2, 4096,
+                                       skew=0.0, seed=11)
+    attempts = [[1] * txns_per_worker] * workers
+    txn_ids = [list(range(w * txns_per_worker, (w + 1) * txns_per_worker))
+               for w in range(workers)]
+    placement = [w % shards for w in range(workers)]
+    return fig_scale._commit_trace(sets, attempts, txn_ids, shards,
+                                   placement)
+
+
+@pytest.mark.parametrize("pname", ["rdma_edr", "ethernet_1g"])
+def test_doubling_workers_halves_uncontended_wallclock(pname):
+    # the same 256-txn uniform workload split over 4 vs 8 worker agents
+    # on one 8-shard fabric: no contention, so the per-agent verb work
+    # halves and the simulated makespan follows
+    prof = netsim.get_profile(pname)
+    m4 = sim.FabricSim(prof, nodes=8, window=2,
+                       windows={"grant": 0}).run(
+        _uncontended_trace(4, 64)).makespan
+    m8 = sim.FabricSim(prof, nodes=8, window=2,
+                       windows={"grant": 0}).run(
+        _uncontended_trace(8, 32)).makespan
+    assert m8 <= 0.55 * m4, f"{pname}: {m8:.2e} vs {m4:.2e}"
+    assert m8 >= 0.25 * m4                 # and not absurdly better

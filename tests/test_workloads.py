@@ -1,0 +1,77 @@
+"""Zipf workload generator (ISSUE 9, fig_scale's key streams).
+
+Pins the two hard rules from ``benchmarks/workloads.py``:
+
+  * the empirical rank frequencies of ``zipf_keys`` track the target
+    ``r^-s`` law — chi-square-style tolerance on a deterministic seed,
+    plus strict rank ordering of the head;
+  * all randomness is host-side numpy at setup time — the module never
+    imports jax, so no RNG can leak into a jitted path.
+"""
+import sys
+
+import numpy as np
+
+from benchmarks import workloads
+
+
+def test_zipf_weights_follow_power_law():
+    w = workloads.zipf_weights(64, 1.2)
+    np.testing.assert_allclose(w.sum(), 1.0)
+    ranks = np.arange(1, 65)
+    np.testing.assert_allclose(w / w[0], ranks ** -1.2, rtol=1e-12)
+
+
+def test_empirical_ranks_follow_target_skew():
+    n, num, s = 64, 200_000, 1.2
+    keys = workloads.zipf_keys(num, n, s, seed=5)
+    obs = np.bincount(keys, minlength=n).astype(np.float64)
+    exp = workloads.zipf_weights(n, s) * num
+    # chi-square-style: normalized statistic small on the seeded draw
+    # (dof = n-1 = 63; a true chi2 draw concentrates near 1 per dof)
+    chi2 = float(np.sum((obs - exp) ** 2 / exp))
+    assert chi2 / (n - 1) < 2.0, chi2
+    # the head is strictly rank-ordered and rank 1 == key 0 (hot head
+    # stays in the lowest range shard)
+    assert obs[0] == obs.max()
+    assert all(obs[r] > obs[r + 1] for r in range(8))
+    # and the head/tail ratio is the power law's, within 10%
+    np.testing.assert_allclose(obs[0] / obs[15], 16 ** s, rtol=0.1)
+
+
+def test_uniform_is_flat_and_deterministic():
+    keys = workloads.zipf_keys(100_000, 32, 0.0, seed=9)
+    obs = np.bincount(keys, minlength=32)
+    assert obs.min() > 0.9 * obs.mean()
+    np.testing.assert_array_equal(
+        keys, workloads.zipf_keys(100_000, 32, 0.0, seed=9))
+
+
+def test_worker_write_sets_shapes_and_distinct_rows():
+    sets = workloads.worker_write_sets(4, 8, 2, 256, skew=1.2, seed=3)
+    assert len(sets) == 4
+    for wsets in sets:
+        assert wsets.shape == (8, 2)
+        for txn in wsets:
+            assert len(set(txn.tolist())) == 2     # distinct within txn
+    # decorrelated worker streams: not all identical
+    assert any(not np.array_equal(sets[0], s) for s in sets[1:])
+
+
+def test_home_affine_ranges_are_disjoint():
+    R, W = 256, 4
+    sets = workloads.worker_write_sets(W, 8, 2, R, skew=1.2, seed=3,
+                                       shared=False)
+    rpw = R // W
+    for w, wsets in enumerate(sets):
+        assert wsets.min() >= w * rpw
+        assert wsets.max() < (w + 1) * rpw
+
+
+def test_no_jax_in_the_generator():
+    # the determinism story: workload randomness is host-side numpy at
+    # setup time; the generator must never pull jax into scope
+    assert "jax" not in workloads.__dict__
+    src = open(workloads.__file__).read()
+    assert "import jax" not in src
+    assert sys.modules["benchmarks.workloads"] is workloads

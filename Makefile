@@ -35,6 +35,16 @@ bench-smoke:     ## timed fig2+fig10 pass on CPU: measured_s schema check only
 	assert not d['check']['violations'], d['check']; \
 	print('bench-smoke ok: fig_scale', len(d['measured_s']), 'measured_s entries,', \
 	d['check']['rules_run'], 'check rules clean')"
+	FIG_SERVE_SMALL=1 PYTHONPATH=src python -m benchmarks.run --figure fig_serve --time --check --json /tmp/bench-smoke
+	python -c "import json; d = json.load(open('/tmp/bench-smoke/BENCH_fig_serve.json')); \
+	assert d['timed'] and d['measured_s'], 'BENCH_fig_serve.json missing measured_s'; \
+	assert all(s > 0 for s in d['measured_s'].values()), d['measured_s']; \
+	assert d['parity'] and d['latency'] and d['recovery'], 'fig_serve extras missing'; \
+	assert all('read_cold' in c['fabric'] for n, c in d['configs'].items() \
+	if n in ('hot0.25', 'all_cold')), 'per-tier counters missing'; \
+	assert not d['check']['violations'], d['check']; \
+	print('bench-smoke ok: fig_serve', len(d['measured_s']), 'measured_s entries,', \
+	d['check']['rules_run'], 'check rules clean')"
 	PYTHONPATH=src python -m repro.fabric.check --suite async -q
 
 check:           ## fabriccheck: jaxpr lint + one-sided race detector

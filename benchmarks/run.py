@@ -43,7 +43,7 @@ import sys
 
 from benchmarks import (fig2_microbench, fig6_rsi, fig7_costmodel,
                         fig8a_joins, fig8b_agg, fig9_ml, fig10_contention,
-                        fig_scale)
+                        fig_scale, fig_serve)
 from repro.fabric import netsim
 
 MODULES = {
@@ -55,6 +55,7 @@ MODULES = {
     "fig9": fig9_ml,
     "fig10": fig10_contention,
     "fig_scale": fig_scale,
+    "fig_serve": fig_serve,
 }
 
 

@@ -664,4 +664,17 @@ class Database:
             stats["txn"] = {"calls": self.txn_stats["commits"]
                             + self.txn_stats["aborts"],
                             "msgs": 0, "bytes": 0, **self.txn_stats}
+        # two-tier traffic: once any verb ran tiered (read_hot/read_cold,
+        # write_hot/write_cold), summarize the hot-tier hit rate per verb
+        # under a "tiers" pseudo-verb so the read storm is visible next to
+        # the raw per-tier counters (peak_outstanding/queue_hist live in
+        # the read_cold/... entries themselves)
+        rates = {}
+        for verb in ("read", "write"):
+            hot = stats.get(f"{verb}_hot", {}).get("msgs", 0)
+            cold = stats.get(f"{verb}_cold", {}).get("msgs", 0)
+            if hot + cold:
+                rates[f"{verb}_hot_rate"] = hot / (hot + cold)
+        if rates:
+            stats["tiers"] = {"calls": 0, "msgs": 0, "bytes": 0, **rates}
         return stats

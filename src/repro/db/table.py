@@ -163,11 +163,25 @@ class Table:
         self.store["words"] = words
         return [int(i) for i in cand[np.array(ok)]]
 
-    def release_lock(self, row: int):
-        """Unlock a claimed row (one-sided WRITE of the lock word)."""
-        self.store["words"] = self._transport.write(
-            self.store["words"], jnp.array([row], jnp.int32),
-            jnp.zeros((1,), WORD), region=f"{self.schema.name}/words")
+    def release_lock(self, row: int, *, signaled: bool = False):
+        """Unlock a claimed row (one-sided WRITE of the lock word).
+
+        ``signaled=True`` posts the WRITE async and waits its completion —
+        the completion fence orders the release before any later CAS
+        re-claim of the same word.  A release that is immediately followed
+        by a re-claim with no intervening global fence (the paged serving
+        engine's swap-out -> swap-in of the same slot) needs this: the
+        plain unsignaled WRITE vs the later CAS is exactly the
+        lost-update shape ``fabric.check`` flags."""
+        idx = jnp.array([row], jnp.int32)
+        zero = jnp.zeros((1,), WORD)
+        region = f"{self.schema.name}/words"
+        if signaled:
+            self.store["words"] = self._transport.write_async(
+                self.store["words"], idx, zero, region=region).wait()
+        else:
+            self.store["words"] = self._transport.write(
+                self.store["words"], idx, zero, region=region)
 
     def locked_rows(self) -> int:
         return int(np.count_nonzero(np.array(self.store["words"]) &

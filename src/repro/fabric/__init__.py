@@ -16,6 +16,12 @@ One RDMA-style substrate for every distributed protocol in the repo:
   transports ``LocalTransport`` (one shard, no collectives) and
              ``MeshTransport(mesh, axis)`` (shard_map + all_to_all), both
              counting messages and bytes per verb
+  tier       ``NamPool.alloc_tiered`` + ``TieredStore``: a bounded local
+             hot tier fronting a disaggregated cold region — deterministic
+             clock/LRU eviction, signaled dirty write-back, ONE-batched
+             async prefetch; cold traffic counts as ``read_cold`` /
+             ``write_cold``, hot hits as local-only ``read_hot`` /
+             ``write_hot`` (docs/serving.md)
   netsim     ``NetworkProfile`` presets for the paper's 1GbE -> EDR axis
              (``PROFILES``); a transport bound to one accumulates modeled
              wall-clock next to its counters, and ``from_counters()`` fits
@@ -36,18 +42,21 @@ from repro.fabric.netsim import (ALIASES, PROFILES, NetworkProfile,
                                  from_counters, get_profile)
 from repro.fabric.sim import (EventTracer, FabricSim, SimEvent, SimResult,
                               analytic_lower_bound, analytic_time,
-                              contended_profile, replay, synthetic_load,
-                              window_sweep)
+                              completion_gaps, contended_profile,
+                              percentile, read_storm, replay,
+                              synthetic_load, window_sweep)
 from repro.fabric.router import (RoutePlan, RouteResult, bucket_ranks,
                                  chunked_all_to_all, pack_fields,
                                  packed_row_words, plan_route, route,
                                  unpack_fields)
+from repro.fabric.tier import TieredStore
 from repro.fabric.transport import LocalTransport, MeshTransport, Transport
-from repro.fabric.verbs import (Completion, NamPool, Region, cas, fetch_add,
-                                read, write)
+from repro.fabric.verbs import (Completion, NamPool, Region, TieredRegion,
+                                cas, fetch_add, read, write)
 
 __all__ = [
     "NamPool", "Region", "read", "write", "cas", "fetch_add", "Completion",
+    "TieredRegion", "TieredStore",
     "route", "RouteResult", "RoutePlan", "plan_route", "bucket_ranks",
     "pack_fields", "unpack_fields", "packed_row_words",
     "chunked_all_to_all",
@@ -57,4 +66,5 @@ __all__ = [
     "FabricSim", "SimEvent", "SimResult", "EventTracer", "replay",
     "analytic_time", "analytic_lower_bound", "synthetic_load",
     "window_sweep", "contended_profile",
+    "read_storm", "percentile", "completion_gaps",
 ]

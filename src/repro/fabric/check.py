@@ -968,6 +968,95 @@ def record_grouped_commit(max_retries: int = 1) -> ScheduleRecorder:
     return rec
 
 
+def lint_paged_decode(blocks: int = 2) -> List[Report]:
+    """Lint the paged-decode data paths (docs/serving.md): page-in — ONE
+    batched one-sided READ of cold KV blocks unpacked bit-exact into the
+    dense decode state — and swap-out — the inverse pack.  Both must stay
+    inside the hot-path budget: sort-free (residency is host bookkeeping,
+    never a device sort), host-free, packed u32 lanes, and ZERO
+    collectives (paging is pure one-sided traffic; a collective in the
+    decode loop would serialize every slot on the slowest page-in)."""
+    from repro import fabric as F
+    from repro.serving.paging import PagedKV
+    slots, max_seq, bk = 2, 32, 8
+    state = {"caches": {"k": jnp.zeros((2, slots, max_seq, 4),
+                                       jnp.bfloat16),
+                        "v": jnp.zeros((2, slots, max_seq, 4),
+                                       jnp.bfloat16)},
+             "pos": jnp.zeros((), jnp.int32)}
+    kv = PagedKV(state, slots=slots, max_seq=max_seq, block_tokens=bk)
+    cold = jnp.zeros((16, kv.block_words), jnp.uint32)
+    js = list(range(blocks))
+
+    def page_in(cold, state):
+        rows = F.read(cold, jnp.arange(blocks, dtype=jnp.int32))
+        return kv.insert_blocks(state, 1, js, rows)
+
+    def swap_out(state):
+        return kv.extract_blocks(state, 1, js)
+
+    rules = HOT_PATH_RULES + (CollectiveBudget({"all_to_all": 0}),)
+    return [lint_fn(page_in, cold, state, rules=rules,
+                    target=f"serve/page_in[{blocks}b]"),
+            lint_fn(swap_out, state, rules=rules,
+                    target=f"serve/swap_out[{blocks}b]")]
+
+
+#: tiny serving model shared by the recorded serve targets (one param
+#: init + one decode compile per process, like test fixtures do).
+_SERVE_MODEL: list = []
+
+
+def _serve_model():
+    from repro.configs import get_config, reduce_config
+    from repro.models import api
+    if not _SERVE_MODEL:
+        cfg = reduce_config(get_config("glm4-9b"))
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        _SERVE_MODEL.append((cfg, params))
+    return _SERVE_MODEL[0]
+
+
+def record_paged_decode(*, hot_frac: float = 0.25,
+                        prefetch: bool = True) -> ScheduleRecorder:
+    """Run a real paged serving engine (tiny model, more resident
+    requests than dense slots, so every round swaps KV blocks through the
+    two-tier store) through a recording transport and return the
+    schedule.  The ordering edges that make it record clean are exactly
+    the shipped ones: evict write-backs are *signaled* WRITEs
+    (``write_async(...).wait()`` — the completion fence orders each
+    write-back before any later page-in READ of the same block), slot
+    releases are signaled for the same reason (the release WRITE vs the
+    next swap-in's re-claim CAS is otherwise a lost update), and every
+    prefetch Completion is waited before its blocks are used.  Drop any
+    of those waits and the same schedule races (the seeded fixtures in
+    ``tests/test_check.py``)."""
+    from repro.db import Database
+    from repro.fabric import LocalTransport
+    from repro.serving.engine import Request, ServeEngine
+    cfg, params = _serve_model()
+    rec = ScheduleRecorder()
+    tp = LocalTransport()
+    tp.recorder = rec
+    db = Database(tp)
+    eng = ServeEngine(cfg, params, slots=2, max_seq=64, db=db, paged=True,
+                      block_tokens=8, max_resident=4, hot_frac=hot_frac,
+                      prefetch=prefetch)
+    reqs = [Request(rid=i, prompt=np.array([2 + i, 5], np.int32),
+                    max_new_tokens=3) for i in range(4)]
+    eng.run(reqs)
+    eng.quiesce()
+    return rec
+
+
+def race_paged_decode(*, hot_frac: float = 0.25,
+                      prefetch: bool = True) -> Report:
+    return check_schedule(
+        record_paged_decode(hot_frac=hot_frac, prefetch=prefetch),
+        target=f"serve/paged[hot={hot_frac:g}"
+               f"{',prefetch' if prefetch else ''}]")
+
+
 def race_sessions(isolation: str = "rsi") -> Report:
     return check_schedule(record_session_waves(isolation),
                           target=f"sessions/{isolation}")
@@ -1031,6 +1120,14 @@ SUITES: Dict[str, Callable[[], List[Report]]] = {
     "scale": lambda: [lint_commit_grouped(3),
                       lint_commit_grouped(1),
                       race_grouped_commit(1)],
+    # two-tier KV paging (docs/serving.md): the page-in/swap-out packs
+    # stay sort-free/collective-free, and the real paged engine schedule
+    # — signaled write-backs, signaled slot releases, waited prefetches —
+    # records race-clean both with a cold tier in play (hot=0.25,
+    # prefetch) and in the all-hot release/re-claim regime
+    "serve": lambda: [*lint_paged_decode(2),
+                      race_paged_decode(hot_frac=0.25, prefetch=True),
+                      race_paged_decode(hot_frac=1.0, prefetch=False)],
 }
 
 #: which check suites gate each paper figure (benchmarks/run.py --check).
@@ -1043,6 +1140,7 @@ FIGURE_SUITES: Dict[str, Tuple[str, ...]] = {
     "fig9": ("paramserver", "route"),
     "fig10": ("sim", "route"),
     "fig_scale": ("scale", "rsi"),
+    "fig_serve": ("serve", "sim"),
 }
 
 

@@ -1,0 +1,286 @@
+"""Two-tier NAM block store: a bounded local hot tier fronting a
+disaggregated cold region (ROADMAP item 2; *The Case for Distributed
+Shared-Memory Databases with RDMA-Enabled Memory Disaggregation*).
+
+A :class:`TieredStore` manages one :class:`~repro.fabric.verbs.TieredRegion`
+— fixed-size u32 blocks whose authoritative copy lives in a cold NAM region
+reached only by one-sided READ/WRITE, with at most ``hot_blocks`` blocks
+cached in local memory.  The serving engine pages KV-cache blocks through
+it (``repro.serving.paging``), but the store is payload-agnostic: any
+fixed-width block space works.
+
+Contracts (all tested in ``tests/test_serving.py``):
+
+  * **Bit-exact at any hot size** — a block round-trips identically
+    whether it was served from the hot tier, paged in cold, or evicted
+    and re-read.  The hot tier changes *traffic*, never bits, which is
+    what makes the serving parity property (paged decode == all-local
+    decode for any hot size >= 1) possible.
+  * **Deterministic eviction** — clock/LRU over a monotone block-epoch
+    counter: every hot touch stamps the block with the next epoch, the
+    victim is the lowest-epoch resident slot (lowest slot index on ties).
+    No runtime RNG, no wall clock: identical op sequences evict
+    identically.
+  * **Write-back, signaled** — evicting a dirty block writes it back to
+    the cold region via ``write_async(...).wait()``: the *signaled* WRITE
+    whose completion fence orders it before any later page-in READ of
+    the same block.  A plain unsignaled write-back would race exactly
+    that READ — the seeded fixture in ``tests/test_check.py`` and the
+    ``serve`` suite of ``repro.fabric.check`` prove both directions.
+  * **Async prefetch** — :meth:`prefetch` issues ONE batched
+    ``read_async`` for the missing blocks and parks the Completion; the
+    first :meth:`get` that touches any of them waits it (firing the
+    READ-completion fence) and lands the whole batch.  Issue -> overlap
+    -> wait: decode compute for wave *i* runs while wave *i+1*'s
+    cold-block READs are in flight (docs/serving.md).
+
+Traffic accounting: cold READ/WRITE go through the transport with
+``tier="cold"`` (counted as ``read_cold``/``write_cold``, priced by any
+bound profile, traced for the contention simulator); hot hits and hot
+writes are counted via ``Transport.count_local`` (``read_hot`` /
+``write_hot`` — local memory, never wire).  Hit rates come straight out
+of ``stats()``: ``read_hot.msgs / (read_hot.msgs + read_cold.msgs)``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class _PrefetchBatch:
+    """One in-flight batched prefetch: the Completion of a single
+    ``read_async`` covering ``blocks`` (in order)."""
+
+    __slots__ = ("comp", "blocks")
+
+    def __init__(self, comp, blocks: List[int]):
+        self.comp = comp
+        self.blocks = blocks
+
+
+class TieredStore:
+    """Residency manager for one two-tier block region.
+
+    pool/transport: the NAM pool the cold region is allocated in and the
+    transport its one-sided verbs travel on (a ``db.Database`` exposes
+    both).  ``name`` must be pool-unique; ``hot_blocks`` is clamped to
+    [1, n_blocks] (1 = all-cold staging, n_blocks = all-local baseline).
+    """
+
+    def __init__(self, pool, transport, name: str, n_blocks: int,
+                 block_words: int, *, hot_blocks: int):
+        self.tier = pool.alloc_tiered(name, n_blocks, block_words,
+                                      hot_blocks=hot_blocks)
+        self.transport = transport
+        self.name = name
+        self.n_blocks = self.tier.n_blocks
+        self.block_words = self.tier.block_words
+        self.hot_blocks = self.tier.hot_blocks
+        self.cold = jnp.zeros((self.n_blocks, self.block_words), jnp.uint32)
+        self.hot = jnp.zeros((self.hot_blocks, self.block_words),
+                             jnp.uint32)
+        # host-side residency bookkeeping (no RNG, no clock: the epoch
+        # counter is the only notion of time)
+        self._slot_block = np.full((self.hot_blocks,), -1, np.int64)
+        self._slot_epoch = np.zeros((self.hot_blocks,), np.int64)
+        self._slot_dirty = np.zeros((self.hot_blocks,), bool)
+        self._block_slot: Dict[int, int] = {}
+        self._pending: Dict[int, _PrefetchBatch] = {}
+        self._epoch = 0
+        self._wb_blocks: List[int] = []
+        self._wb_rows: List[jnp.ndarray] = []
+        self.counters = {"hits": 0, "misses": 0, "evictions": 0,
+                         "writebacks": 0, "prefetched": 0, "drops": 0}
+
+    # ------------------------------------------------------ residency ---
+
+    def resident(self, block: int) -> bool:
+        return int(block) in self._block_slot
+
+    def resident_blocks(self) -> List[int]:
+        """Hot-resident block ids, in hot-slot order (tests/debug)."""
+        return [int(b) for b in self._slot_block if b >= 0]
+
+    def _touch(self, slot: int):
+        self._epoch += 1
+        self._slot_epoch[slot] = self._epoch
+
+    def _victim(self) -> int:
+        """Deterministic clock/LRU victim: first free slot, else the
+        lowest-epoch resident slot (lowest index on ties)."""
+        free = np.nonzero(self._slot_block < 0)[0]
+        if free.size:
+            return int(free[0])
+        return int(np.argmin(self._slot_epoch))
+
+    def _install(self, block: int, row, *, dirty: bool):
+        """Place ``row`` in the hot tier under ``block``, evicting the
+        clock/LRU victim (dirty victims queue a write-back, flushed once
+        per public op as a single signaled WRITE)."""
+        slot = self._victim()
+        old = int(self._slot_block[slot])
+        if old >= 0:
+            self.counters["evictions"] += 1
+            if self._slot_dirty[slot]:
+                self._wb_blocks.append(old)
+                self._wb_rows.append(self.hot[slot])
+            del self._block_slot[old]
+        self.hot = self.hot.at[slot].set(row)
+        self._slot_block[slot] = int(block)
+        self._slot_dirty[slot] = dirty
+        self._block_slot[int(block)] = slot
+        self._touch(slot)
+
+    def _flush_writebacks(self):
+        if not self._wb_blocks:
+            return
+        idx = jnp.asarray(self._wb_blocks, jnp.int32)
+        vals = jnp.stack(self._wb_rows)
+        # signaled write-back: wait() fires the WRITE-completion fence
+        # that orders the evict ahead of any later page-in READ of the
+        # same block (the serve-suite race contract)
+        self.cold = self.transport.write_async(
+            self.cold, idx, vals, region=self.name, tier="cold").wait()
+        self.counters["writebacks"] += len(self._wb_blocks)
+        self._wb_blocks, self._wb_rows = [], []
+
+    def _land(self, batch: _PrefetchBatch) -> Dict[int, jnp.ndarray]:
+        """Wait a prefetch batch (firing its READ-completion fence) and
+        land every block of it in the hot tier (clean).  Returns the
+        landed rows — with a hot tier smaller than the batch, later
+        landings evict earlier ones, but the returned snapshot is the
+        read value either way (bits never depend on hot size)."""
+        vals = batch.comp.wait()
+        landed: Dict[int, jnp.ndarray] = {}
+        for i, b in enumerate(batch.blocks):
+            self._pending.pop(b, None)
+            landed[b] = vals[i]
+            self._install(b, vals[i], dirty=False)
+        return landed
+
+    # ------------------------------------------------------------ ops ---
+
+    def get(self, blocks: Sequence[int]) -> jnp.ndarray:
+        """Fetch blocks (any mix of hot hits, in-flight prefetches, and
+        cold misses) -> ``(len(blocks), block_words)`` u32.  Misses are
+        ONE batched one-sided READ of the cold region (the read storm is
+        one verb call, ``msgs`` = missing blocks); in-flight prefetch
+        batches are waited here — the issue->overlap->wait edge."""
+        blocks = [int(b) for b in blocks]
+        out: Dict[int, jnp.ndarray] = {}
+        hits = 0
+        for b in blocks:
+            if b in out:
+                continue
+            slot = self._block_slot.get(b)
+            if slot is not None:
+                out[b] = self.hot[slot]
+                self._touch(slot)
+                hits += 1
+        if hits:
+            self.counters["hits"] += hits
+            self.transport.count_local("read_hot", hits,
+                                       hits * self.block_words * 4)
+        for b in blocks:
+            if b not in out and b in self._pending:
+                landed = self._land(self._pending[b])
+                for lb, row in landed.items():
+                    out.setdefault(lb, row)
+        missing = sorted({b for b in blocks if b not in out})
+        if missing:
+            self.counters["misses"] += len(missing)
+            idx = jnp.asarray(missing, jnp.int32)
+            vals = self.transport.read(self.cold, idx, region=self.name,
+                                       tier="cold")
+            for i, b in enumerate(missing):
+                out[b] = vals[i]
+                self._install(b, vals[i], dirty=False)
+        self._flush_writebacks()
+        if not blocks:
+            return jnp.zeros((0, self.block_words), jnp.uint32)
+        return jnp.stack([out[b] for b in blocks])
+
+    def put(self, blocks: Sequence[int], vals, *, dirty: bool = True):
+        """Store block rows through the hot tier (``vals``: ``(k,
+        block_words)`` u32).  Dirty blocks reach the cold region only on
+        eviction (write-back) — the hot tier is a write-back cache, not
+        write-through."""
+        blocks = [int(b) for b in blocks]
+        for i, b in enumerate(blocks):
+            if b in self._pending:
+                self._land(self._pending[b])     # overwrite an in-flight
+            slot = self._block_slot.get(b)       # prefetch coherently
+            if slot is not None:
+                self.hot = self.hot.at[slot].set(vals[i])
+                self._slot_dirty[slot] = self._slot_dirty[slot] or dirty
+                self._touch(slot)
+            else:
+                self._install(b, vals[i], dirty=dirty)
+        if blocks:
+            self.transport.count_local("write_hot", len(blocks),
+                                       len(blocks) * self.block_words * 4)
+        self._flush_writebacks()
+
+    def prefetch(self, blocks: Iterable[int]) -> int:
+        """Issue ONE async cold READ for the not-yet-hot blocks and
+        return how many it covers (0 = nothing to do).  The Completion is
+        parked; the first :meth:`get` touching any covered block waits it
+        and lands the whole batch.  Between issue and that wait the
+        caller overlaps compute — an unwaited prefetch at shutdown would
+        be an unsignaled one-sided READ, so :meth:`quiesce` drains them."""
+        missing = sorted({int(b) for b in blocks
+                          if int(b) not in self._block_slot
+                          and int(b) not in self._pending})
+        if not missing:
+            return 0
+        idx = jnp.asarray(missing, jnp.int32)
+        comp = self.transport.read_async(self.cold, idx, region=self.name,
+                                         tier="cold")
+        batch = _PrefetchBatch(comp, missing)
+        for b in missing:
+            self._pending[b] = batch
+        self.counters["prefetched"] += len(missing)
+        return len(missing)
+
+    def drop(self, blocks: Iterable[int]):
+        """Free blocks (their owner finished): discard hot residency
+        without write-back; in-flight prefetches covering them are waited
+        first (no dangling unsignaled READs)."""
+        for b in sorted({int(b) for b in blocks}):
+            if b in self._pending:
+                self._land(self._pending[b])
+            slot = self._block_slot.pop(b, None)
+            if slot is not None:
+                self._slot_block[slot] = -1
+                self._slot_epoch[slot] = 0
+                self._slot_dirty[slot] = False
+                self.counters["drops"] += 1
+        self._flush_writebacks()
+
+    def quiesce(self):
+        """Drain outstanding prefetch batches (waiting their completions)
+        and flush queued write-backs — after this the schedule holds no
+        unsignaled one-sided requests."""
+        while self._pending:
+            self._land(next(iter(self._pending.values())))
+        self._flush_writebacks()
+
+    # ---------------------------------------------------------- stats ---
+
+    def hit_rate(self) -> Optional[float]:
+        """Hot-tier hit rate over all reads so far (None before any)."""
+        tot = self.counters["hits"] + self.counters["misses"]
+        return self.counters["hits"] / tot if tot else None
+
+    def stats(self) -> dict:
+        """Residency + traffic counters for BENCH JSON / fabric_stats."""
+        return {**self.counters,
+                "n_blocks": self.n_blocks,
+                "hot_blocks": self.hot_blocks,
+                "block_words": self.block_words,
+                "hot_fraction": self.tier.hot_fraction,
+                "resident": len(self._block_slot),
+                "pending": len(self._pending),
+                "hit_rate": self.hit_rate()}

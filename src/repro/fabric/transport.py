@@ -93,6 +93,7 @@ class Transport:
 
     def __init__(self, profile=None, recorder=None, tracer=None):
         self._stats: dict = {}
+        self._local_stats: dict = {}
         self.plan_builds: int = 0
         self.profile = (netsim.get_profile(profile)
                         if profile is not None else None)
@@ -124,21 +125,50 @@ class Transport:
                              collective=collective and self.n > 1,
                              window=window, fanout=self.n)
 
+    def count_local(self, verb: str, msgs: int, nbytes: int = 0, *,
+                    window: int = 0):
+        """Count LOCAL-tier traffic (e.g. hot-tier block hits of a
+        :class:`~repro.fabric.verbs.TieredRegion`): same counter schema as
+        :meth:`_count` — calls/msgs/bytes/peak_outstanding/queue_hist —
+        but kept out of the wire ledger: no ``modeled_s``, no tracer
+        event (local memory costs no NIC and no link), and excluded from
+        :meth:`modeled_time`.  The counters still surface in
+        :meth:`stats` (disjoint verb names like ``read_hot``), which is
+        how hot/cold hit rates reach ``fabric_stats()`` and the BENCH
+        JSON."""
+        s = self._local_stats.setdefault(
+            verb, {"calls": 0, "msgs": 0, "bytes": 0})
+        s["calls"] += 1
+        s["msgs"] += int(msgs)
+        s["bytes"] += int(nbytes)
+        outstanding = min(int(msgs), window) if window else int(msgs)
+        s["peak_outstanding"] = max(s.get("peak_outstanding", 0),
+                                    outstanding)
+        hist = s.setdefault("queue_hist", {})
+        b = _depth_bucket(int(msgs) - outstanding)
+        hist[b] = hist.get(b, 0) + 1
+
     def stats(self) -> dict:
         """{verb: {calls, msgs, bytes, peak_outstanding, queue_hist
         [, modeled_s]}} accumulated since reset (``modeled_s`` only when a
         profile is bound; ``queue_hist`` maps power-of-two depth buckets
-        like "0"/"1-1"/"2-3" to call counts)."""
+        like "0"/"1-1"/"2-3" to call counts).  Tiered verbs appear under
+        suffixed names (``read_cold`` = wire traffic to a cold region,
+        ``read_hot`` = local hot-tier hits via :meth:`count_local` — the
+        latter carry no ``modeled_s`` and never enter
+        :meth:`modeled_time`)."""
         out = {}
-        for k, v in self._stats.items():
-            d = dict(v)
-            if "queue_hist" in d:
-                d["queue_hist"] = dict(d["queue_hist"])
-            out[k] = d
+        for src in (self._stats, self._local_stats):
+            for k, v in src.items():
+                d = dict(v)
+                if "queue_hist" in d:
+                    d["queue_hist"] = dict(d["queue_hist"])
+                out[k] = d
         return out
 
     def reset_stats(self):
         self._stats = {}
+        self._local_stats = {}
         self.plan_builds = 0
 
     def modeled_time(self, profile=None) -> float:
@@ -171,16 +201,27 @@ class Transport:
 
     # ----------------------------------------------------------- verbs ---
 
-    def read(self, region_arr, idx, *, region=None):
-        self._count("read", idx.size, idx.size * _row_bytes(region_arr))
+    @staticmethod
+    def _tiered(verb: str, tier) -> str:
+        """Counter key of a tiered verb call: ``read`` -> ``read_cold``
+        when the access targets the cold tier of a
+        :class:`~repro.fabric.verbs.TieredRegion`.  The recorder still
+        sees the plain READ/WRITE (race semantics are tier-blind); only
+        the counters, modeled time, and the sim trace carry the tier."""
+        return f"{verb}_{tier}" if tier else verb
+
+    def read(self, region_arr, idx, *, region=None, tier=None):
+        self._count(self._tiered("read", tier), idx.size,
+                    idx.size * _row_bytes(region_arr))
         out = _verbs.read(region_arr, idx)
         if self.recorder is not None and region is not None:
             self.recorder.record("READ", region, idx,
                                  region_len=region_arr.shape[0])
         return out
 
-    def write(self, region_arr, idx, values, *, region=None):
-        self._count("write", idx.size, values.size * values.dtype.itemsize)
+    def write(self, region_arr, idx, values, *, region=None, tier=None):
+        self._count(self._tiered("write", tier), idx.size,
+                    values.size * values.dtype.itemsize)
         out = _verbs.write(region_arr, idx, values)
         if self.recorder is not None and region is not None:
             self.recorder.record("WRITE", region, idx,
@@ -213,7 +254,7 @@ class Transport:
         on_wait = (lambda: rec.complete(acc)) if acc is not None else None
         return _verbs.Completion(value, on_wait=on_wait)
 
-    def read_async(self, region_arr, idx, *, region=None):
+    def read_async(self, region_arr, idx, *, region=None, tier=None):
         """Async READ: issue -> overlap -> ``wait()``.  Counts and computes
         exactly like :meth:`read` (JAX arrays are functional — the value is
         ready at issue), but the ordering edge is withheld: the access is
@@ -221,7 +262,8 @@ class Transport:
         the returned Completion is waited.  An unwaited async READ is an
         unsignaled one-sided request — later writes to the same rows race
         it, and ``fabric.check`` will say so."""
-        self._count("read", idx.size, idx.size * _row_bytes(region_arr))
+        self._count(self._tiered("read", tier), idx.size,
+                    idx.size * _row_bytes(region_arr))
         out = _verbs.read(region_arr, idx)
         acc = None
         if self.recorder is not None and region is not None:
@@ -230,13 +272,15 @@ class Transport:
                                        deferred=True)
         return self._deferred(out, acc)
 
-    def write_async(self, region_arr, idx, values, *, region=None):
+    def write_async(self, region_arr, idx, values, *, region=None,
+                    tier=None):
         """Async WRITE.  Same counting/compute as :meth:`write`; the
         difference from the sync verb is that ``wait()`` is a *signaled*
         write — it fires a write-completion fence (an ordering edge the
         plain one-sided WRITE never has), so a waited async WRITE can
         legally precede a dependent access where an unwaited one races."""
-        self._count("write", idx.size, values.size * values.dtype.itemsize)
+        self._count(self._tiered("write", tier), idx.size,
+                    values.size * values.dtype.itemsize)
         out = _verbs.write(region_arr, idx, values)
         acc = None
         if self.recorder is not None and region is not None:

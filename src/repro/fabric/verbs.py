@@ -35,6 +35,30 @@ class Region:
     logical_axes: tuple
 
 
+@dataclass(frozen=True)
+class TieredRegion:
+    """Descriptor of a two-tier block region: a bounded LOCAL hot tier
+    fronting a disaggregated cold region (*The Case for Distributed
+    Shared-Memory Databases with RDMA-Enabled Memory Disaggregation*:
+    memory is a network-attached pool with a small cache in front).
+
+    Only the cold tier is a NAM region (``cold`` — rows are fixed-size
+    u32 blocks reached by one-sided READ/WRITE); the hot tier is client
+    memory, sized ``hot_blocks`` rows, and never crosses the wire.  The
+    residency/eviction machinery lives in
+    :class:`repro.fabric.tier.TieredStore`."""
+
+    name: str
+    n_blocks: int
+    block_words: int
+    hot_blocks: int
+    cold: Region
+
+    @property
+    def hot_fraction(self) -> float:
+        return self.hot_blocks / self.n_blocks
+
+
 @dataclass
 class NamPool:
     """Factory for named regions: allocates logical arrays and binds their
@@ -49,6 +73,25 @@ class NamPool:
         r = Region(name, tuple(shape), dtype, la)
         self.regions[name] = r
         return r
+
+    def alloc_tiered(self, name: str, n_blocks: int, block_words: int, *,
+                     hot_blocks: int) -> TieredRegion:
+        """Allocate a two-tier block region: the cold ``(n_blocks,
+        block_words)`` u32 region lives in the pool (disaggregated —
+        reached only by one-sided verbs), the hot tier is a bound on
+        LOCAL block rows a client may cache in front of it.  ``hot_blocks``
+        is clamped to [1, n_blocks]: one block is the degenerate all-cold
+        staging buffer, n_blocks the all-local baseline."""
+        n_blocks = int(n_blocks)
+        block_words = int(block_words)
+        if n_blocks < 1 or block_words < 1:
+            raise ValueError("alloc_tiered needs n_blocks >= 1 and "
+                             "block_words >= 1")
+        hot_blocks = max(1, min(int(hot_blocks), n_blocks))
+        cold = self.alloc(name, (n_blocks, block_words), jnp.uint32)
+        return TieredRegion(name=name, n_blocks=n_blocks,
+                            block_words=block_words, hot_blocks=hot_blocks,
+                            cold=cold)
 
     def zeros(self) -> dict:
         return {n: jnp.zeros(r.shape, r.dtype)

@@ -1,3 +1,5 @@
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.paging import BlockAllocator, PagedKV, PageTable
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "Request", "PagedKV", "PageTable",
+           "BlockAllocator"]

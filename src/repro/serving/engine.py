@@ -9,6 +9,24 @@ can claim capacity without a coordinator.
 The engine runs fixed-shape jitted steps (prefill once per request wave,
 then one decode_step per token across all active slots) — static shapes keep
 the compiled artifact stable, production-style.
+
+Two modes (docs/serving.md):
+
+  * **dense** (default) — every admitted request owns a dense decode slot
+    for its whole lifetime; KV state never leaves device memory.
+  * **paged** (``paged=True``) — admitted requests may outnumber dense
+    slots.  KV-cache blocks live in a two-tier NAM region
+    (``fabric.TieredStore``): each round a deterministic round-robin wave
+    of at most ``slots`` requests is swapped into the dense state (cold
+    blocks paged in over one-sided READs), decoded one token, and swapped
+    out append-only (new blocks stored dirty, written back on eviction).
+    With ``prefetch=True`` the next wave's blocks are requested with ONE
+    ``read_async`` *before* this wave's decode compute — wave *i*'s
+    compute overlaps wave *i+1*'s cold READs, the paper's issue ->
+    overlap -> wait idiom.  All residency decisions (wave rotation,
+    eviction, block allocation) are deterministic — no runtime RNG — and
+    the decoded bits are identical for ANY hot-tier size >= 1 block
+    (tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -20,7 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.db import Database
+from repro.fabric.tier import TieredStore
 from repro.models import api
+from repro.serving.paging import BlockAllocator, PagedKV, PageTable
 
 
 @dataclass
@@ -31,11 +51,32 @@ class Request:
     out: list = field(default_factory=list)
     slot: int = -1
     done: bool = False
+    fed: int = 0                  # prompt tokens consumed (paged prefill)
+
+
+# One compiled decode_step per config: engines in one process (benchmark
+# sweeps build several per sweep point) share the compile instead of each
+# paying a trace.  Keyed by id() with the cfg kept alive alongside.
+_DECODE_CACHE: dict = {}
+
+
+def _decode_fn(cfg):
+    ent = _DECODE_CACHE.get(id(cfg))
+    if ent is None:
+        ent = (cfg, jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t)))
+        _DECODE_CACHE[id(cfg)] = ent
+    return ent[1]
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256,
-                 db: Optional[Database] = None):
+                 db: Optional[Database] = None,
+                 paged: bool = False, block_tokens: int = 16,
+                 max_resident: Optional[int] = None,
+                 capacity_blocks: Optional[int] = None,
+                 hot_blocks: Optional[int] = None,
+                 hot_frac: Optional[float] = None,
+                 prefetch: bool = True, decode_compute_s: float = 0.0):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -51,8 +92,44 @@ class ServeEngine:
             name, num_records=slots, payload_words=1)
         self.state = api.init_decode_state(cfg, params, slots, max_seq)
         self.active: dict[int, Request] = {}
-        self._decode = jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t))
+        self._decode = _decode_fn(cfg)
         self._pos = np.zeros((slots,), np.int32)
+
+        self.paged = paged
+        if not paged:
+            return
+        # ------------------------------------------------- paged mode ---
+        self.kv = PagedKV(self.state, slots=slots, max_seq=max_seq,
+                          block_tokens=block_tokens)
+        if self.kv.block_words == 0:
+            raise ValueError("paged mode needs at least one seq-axis leaf")
+        self.block_tokens = block_tokens
+        # aux (sequence-free recurrent) state pads into whole blocks so
+        # the cold region stays one fixed-width block space
+        self._aux_blocks = (-(-self.kv.aux_words // self.kv.block_words)
+                            if self.kv.aux_words else 0)
+        self.max_resident = int(max_resident or slots)
+        per_req = self.kv.blocks_per_slot + self._aux_blocks
+        self.capacity_blocks = int(capacity_blocks
+                                   or self.max_resident * per_req)
+        if hot_blocks is None:
+            hot_blocks = (self.capacity_blocks if hot_frac is None
+                          else max(1, int(np.ceil(self.capacity_blocks
+                                                  * hot_frac))))
+        self.store = TieredStore(self.db.pool, self.db.transport,
+                                 f"{name}_kv", self.capacity_blocks,
+                                 self.kv.block_words,
+                                 hot_blocks=int(hot_blocks))
+        self.allocator = BlockAllocator(self.capacity_blocks)
+        self.prefetch = prefetch
+        self.decode_compute_s = float(decode_compute_s)
+        self.waiting: list[Request] = []
+        self.resident: dict[int, Request] = {}     # rid -> Request
+        self.pages: dict[int, PageTable] = {}
+        self._dense: list[Optional[int]] = [None] * slots  # slot -> rid
+        self._pos_in = [0] * slots    # decode clock at swap-in, per slot
+        self._cursor = 0              # round-robin wave rotation
+        self._clock = 0               # global decode position ("pos")
 
     @property
     def slot_words(self):
@@ -65,12 +142,16 @@ class ServeEngine:
         """Claim up to n free slots via the table's lock-column CAS."""
         return self.slot_table.claim_locks(n)
 
-    def _release(self, slot: int):
-        self.slot_table.release_lock(slot)
+    def _release(self, slot: int, *, signaled: bool = False):
+        self.slot_table.release_lock(slot, signaled=signaled)
 
-    # --------------------------------------------------------- serving --
+    # ----------------------------------------------------- dense mode ---
 
     def submit(self, reqs: list[Request]):
+        if self.paged:
+            for r in reqs:
+                self.enqueue(r)
+            return
         free = self._claim_slots(len(reqs))
         assert len(free) >= len(reqs), "pool exhausted"
         for r, s in zip(reqs, free):
@@ -92,6 +173,8 @@ class ServeEngine:
 
     def decode_round(self):
         """One token for every active request (continuous batching)."""
+        if self.paged:
+            return self.tick()
         tok = np.zeros((self.slots, 1), np.int32)
         for s, r in self.active.items():
             tok[s, 0] = (r.out[-1] if r.out else
@@ -109,7 +192,193 @@ class ServeEngine:
 
     def run(self, reqs: list[Request]):
         self.submit(reqs)
+        if self.paged:
+            return self.drain()
         done = []
         while self.active:
             done.extend(self.decode_round())
         return done
+
+    # ----------------------------------------------------- paged mode ---
+
+    def enqueue(self, req: Request):
+        """Queue a request (admitted into the resident set — KV pages in
+        the NAM block space — as capacity frees up)."""
+        assert self.paged, "enqueue() is the paged-mode entry point"
+        self.waiting.append(req)
+
+    def _admit(self):
+        while self.waiting and len(self.resident) < self.max_resident:
+            r = self.waiting.pop(0)
+            self.resident[r.rid] = r
+            self.pages[r.rid] = PageTable()
+
+    def _wave_at(self, order: list, start: int) -> list:
+        n = min(self.slots, len(order))
+        return [order[(start + i) % len(order)] for i in range(n)]
+
+    def _pick_wave(self) -> list:
+        """Deterministic round-robin over resident rids: every request
+        decodes within ceil(resident/slots) rounds of its last turn,
+        independent of hot/cold residency (so the schedule — and hence
+        the bits — cannot depend on the hot-tier size)."""
+        order = sorted(self.resident)
+        if not order:
+            return []
+        start = self._cursor % len(order)
+        wave = self._wave_at(order, start)
+        self._cursor = start + len(wave)
+        return wave
+
+    def _will_finish(self, r: Request) -> bool:
+        """Whether one more decode turn completes ``r`` — a pure count
+        (prompt fed, tokens out), independent of the token values, so the
+        next wave is exactly predictable for prefetch."""
+        return (r.fed >= len(r.prompt)
+                and len(r.out) + 1 >= r.max_new_tokens)
+
+    def _predict_next_wave(self, wave: list) -> list:
+        fin = {rid for rid in wave if self._will_finish(self.resident[rid])}
+        order = [rid for rid in self.resident if rid not in fin]
+        room = self.max_resident - len(order)
+        order += [r.rid for r in self.waiting[:max(room, 0)]]
+        order.sort()
+        if not order:
+            return []
+        return self._wave_at(order, self._cursor % len(order))
+
+    def _swap_out(self, slot: int):
+        """Evict ``slot``'s request from the dense state, append-only:
+        only blocks covering rows written since swap-in ([pos_in, clock))
+        are stored (dirty), plus the aux page — everything older is
+        already in the block space bit-exact."""
+        rid = self._dense[slot]
+        pt = self.pages[rid]
+        pos_in, pos_now = self._pos_in[slot], self._clock
+        assert pos_now > pos_in, "dense slot never decoded"
+        j0, j1 = pos_in // self.block_tokens, (pos_now - 1) // self.block_tokens
+        js = list(range(j0, j1 + 1))
+        rows = self.kv.extract_blocks(self.state, slot, js)
+        ids = []
+        for j in js:
+            if j not in pt.blocks:
+                pt.blocks[j] = self.allocator.alloc(1)[0]
+            ids.append(pt.blocks[j])
+        if self._aux_blocks:
+            aux = self.kv.extract_aux(self.state, slot)
+            pad = self._aux_blocks * self.kv.block_words - aux.shape[0]
+            aux = jnp.pad(aux, (0, pad)).reshape(self._aux_blocks,
+                                                 self.kv.block_words)
+            if not pt.aux:
+                pt.aux = self.allocator.alloc(self._aux_blocks)
+            ids.extend(pt.aux)
+            rows = jnp.concatenate([rows, aux])
+        self.store.put(ids, rows, dirty=True)
+        self._dense[slot] = None
+        # signaled: the completion fence orders this release before the
+        # CAS that re-claims the slot for the next swap-in (else: the
+        # lost-update shape the race detector flags)
+        self._release(slot, signaled=True)
+
+    def _swap_in(self, slot: int, rid: int):
+        """Page ``rid``'s blocks into dense ``slot``: zero the slot (rows
+        no block covers must read as zeros), then land stored blocks +
+        aux through the tiered store — hot hits are free, cold misses are
+        ONE batched READ, in-flight prefetches are waited here."""
+        pt = self.pages[rid]
+        self.state = self.kv.zero_slot(self.state, slot)
+        ids = pt.all_ids()
+        if ids:
+            rows = self.store.get(ids)
+            js = sorted(pt.blocks)
+            if js:
+                self.state = self.kv.insert_blocks(self.state, slot, js,
+                                                   rows[:len(js)])
+            if pt.aux:
+                aux = rows[len(js):].reshape(-1)[:self.kv.aux_words]
+                self.state = self.kv.insert_aux(self.state, slot, aux)
+        self._dense[slot] = rid
+        self._pos_in[slot] = self._clock
+        self.resident[rid].slot = slot
+
+    def _finish(self, rid: int):
+        pt = self.pages.pop(rid)
+        r = self.resident.pop(rid)
+        slot = r.slot
+        ids = pt.all_ids()
+        if ids:
+            self.store.drop(ids)
+            self.allocator.release(ids)
+        self._dense[slot] = None
+        r.slot = -1
+        self._release(slot, signaled=True)
+
+    def tick(self):
+        """One continuous-batching round: admit, rotate a wave into the
+        dense slots, prefetch the *next* wave's cold blocks, then decode
+        one token for the wave (the compute the prefetched READs overlap).
+        Returns the requests finished this round."""
+        assert self.paged, "tick() is the paged-mode decode round"
+        self._admit()
+        wave = self._pick_wave()
+        if not wave:
+            return []
+        wave_set = set(wave)
+        for slot in range(self.slots):
+            rid = self._dense[slot]
+            if rid is not None and rid not in wave_set:
+                self._swap_out(slot)
+        dense_now = {rid for rid in self._dense if rid is not None}
+        incoming = [rid for rid in wave if rid not in dense_now]
+        if incoming:
+            claimed = self._claim_slots(len(incoming))
+            assert len(claimed) >= len(incoming), "slot pool exhausted"
+            for slot, rid in zip(claimed, incoming):
+                self._swap_in(slot, rid)
+        if self.prefetch:
+            dense_now = {rid for rid in self._dense if rid is not None}
+            ids = []
+            for rid in self._predict_next_wave(wave):
+                if rid not in dense_now and rid in self.pages:
+                    ids.extend(self.pages[rid].all_ids())
+            if ids:
+                self.store.prefetch(ids)
+        tracer = getattr(self.db.transport, "tracer", None)
+        if tracer is not None and self.decode_compute_s > 0:
+            tracer.emit_compute(self.decode_compute_s)
+        tok = np.zeros((self.slots, 1), np.int32)
+        for rid in wave:
+            r = self.resident[rid]
+            if r.fed < len(r.prompt):
+                tok[r.slot, 0] = r.prompt[r.fed]
+            else:
+                tok[r.slot, 0] = (r.out[-1] if r.out else
+                                  (r.prompt[-1] if len(r.prompt) else 0))
+        nxt = self._step(jnp.asarray(tok))
+        self._clock += 1
+        assert self._clock < self.max_seq, "decode clock ran off max_seq"
+        finished = []
+        for rid in wave:
+            r = self.resident[rid]
+            if r.fed < len(r.prompt):
+                r.fed += 1         # prefill turn: output discarded
+            else:
+                r.out.append(int(nxt[r.slot]))
+            self.pages[rid].extent = self._clock
+            if r.fed >= len(r.prompt) and len(r.out) >= r.max_new_tokens:
+                r.done = True
+                finished.append(r)
+                self._finish(rid)
+        return finished
+
+    def drain(self):
+        """Tick until every queued and resident request finished."""
+        done = []
+        while self.resident or self.waiting:
+            done.extend(self.tick())
+        return done
+
+    def quiesce(self):
+        """Drain outstanding prefetches (no dangling unsignaled READs)."""
+        if self.paged:
+            self.store.quiesce()

@@ -1,0 +1,240 @@
+"""KV-cache paging: bit-exact block codec between dense decode state and
+the two-tier NAM block space (docs/serving.md).
+
+The decode state (``models.api.init_decode_state``) is a fixed-shape
+pytree: per-sublayer KV caches stacked ``(G, slots, max_seq, ...)``, an
+optional ``"pre"`` subtree shaped ``(slots, max_seq, ...)``, non-sequence
+recurrent state (SSM/conv) without a ``max_seq`` axis, and one shared
+scalar ``"pos"``.  :class:`PagedKV` classifies the leaves once:
+
+  * **paged** leaves carry a ``max_seq`` axis right after the slot axis —
+    sliced into ``block_tokens``-row blocks per slot,
+  * **aux** leaves are per-slot but sequence-free (recurrent state) —
+    one aux page per slot,
+  * ``"pos"`` is shared (never paged).
+
+A block is the pack of every paged leaf's ``(slot, token-block)`` slice
+through the router's u32 word codec (``pack_fields(valid=False)`` /
+``_unpack_leaf`` — the same bit-exact lanes the wire router uses, so
+sub-word dtypes like bf16 round-trip exactly).  All blocks of a model
+share one static ``block_words`` width — exactly the fixed-size cold
+region rows ``NamPool.alloc_tiered`` allocates.
+
+Slot/row indices here are host ints (the engine's residency loop runs
+eagerly between jitted decode steps); the jitted step never sees paging.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.fabric import router
+
+
+def _path_key(entry) -> str:
+    key = getattr(entry, "key", None)
+    if key is None:
+        key = getattr(entry, "idx", None)
+    return str(key)
+
+
+@dataclass(frozen=True)
+class _LeafPlan:
+    idx: int                 # position in tree_flatten(state) leaf order
+    shape: tuple
+    dtype: object
+    batch_axis: int
+    seq_axis: Optional[int]  # None = aux (sequence-free per-slot state)
+    words: int               # packed u32 lanes of one slot-slice
+
+
+class PagedKV:
+    """Block codec + slicing plan for one decode-state template.
+
+    ``template`` may be the state pytree itself or matching
+    ShapeDtypeStructs; only shapes/dtypes are read.  Raises if the state
+    holds a per-slot subtree this codec does not understand — paging must
+    be bit-exact or refuse.
+    """
+
+    def __init__(self, template, *, slots: int, max_seq: int,
+                 block_tokens: int):
+        if max_seq % block_tokens:
+            raise ValueError("block_tokens must divide max_seq")
+        self.slots = int(slots)
+        self.max_seq = int(max_seq)
+        self.block_tokens = int(block_tokens)
+        self.blocks_per_slot = self.max_seq // self.block_tokens
+        paths, self.treedef = jax.tree_util.tree_flatten_with_path(template)
+        self.paged: List[_LeafPlan] = []
+        self.aux: List[_LeafPlan] = []
+        for i, (path, leaf) in enumerate(paths):
+            key0 = _path_key(path[0]) if path else ""
+            if key0 == "pos":
+                continue                       # shared decode clock
+            if key0 == "caches":
+                b = 1                          # (G, slots, [max_seq,] ...)
+            elif key0 == "pre":
+                b = 0                          # (slots, [max_seq,] ...)
+            else:
+                raise ValueError(
+                    f"PagedKV: unknown decode-state subtree {key0!r} — "
+                    "cannot guarantee bit-exact paging")
+            shape = tuple(leaf.shape)
+            if len(shape) <= b or shape[b] != self.slots:
+                raise ValueError(
+                    f"PagedKV: leaf {key0}[{i}] shape {shape} has no slot "
+                    f"axis of size {self.slots} at axis {b}")
+            seq = (b + 1 if len(shape) > b + 1 and shape[b + 1] == max_seq
+                   else None)
+            if seq is not None:
+                sl = list(shape)
+                sl[b], sl[seq] = 1, self.block_tokens
+            else:
+                sl = list(shape)
+                sl[b] = 1
+            elems = math.prod(sl)
+            words = router._leaf_row_words((1, elems), leaf.dtype)
+            plan = _LeafPlan(i, shape, jnp.dtype(leaf.dtype), b, seq, words)
+            (self.paged if seq is not None else self.aux).append(plan)
+        self.block_words = sum(p.words for p in self.paged)
+        self.aux_words = sum(p.words for p in self.aux)
+
+    # ------------------------------------------------------- slicing ----
+
+    def _slot_slice(self, plan: _LeafPlan, slot: int, j: Optional[int],
+                    rows: Optional[tuple] = None):
+        """Index tuple selecting ``slot``'s token-block ``j`` (or row range
+        ``rows``; or the whole slot when both are None) of one leaf."""
+        sl = [slice(None)] * len(plan.shape)
+        sl[plan.batch_axis] = slice(slot, slot + 1)
+        if plan.seq_axis is not None:
+            if j is not None:
+                sl[plan.seq_axis] = slice(j * self.block_tokens,
+                                          (j + 1) * self.block_tokens)
+            elif rows is not None:
+                sl[plan.seq_axis] = slice(rows[0], rows[1])
+        return tuple(sl)
+
+    def _pack(self, leaves, plans, slot: int, j: Optional[int]):
+        cols = [leaves[p.idx][self._slot_slice(p, slot, j)].reshape(1, -1)
+                for p in plans]
+        packed, _, _ = router.pack_fields(cols, valid=False)
+        return packed[0]
+
+    def _unpack_into(self, leaves, plans, slot: int, j: Optional[int], row):
+        col = 0
+        for p in plans:
+            lanes = row[None, col:col + p.words]
+            col += p.words
+            sl = self._slot_slice(p, slot, j)
+            elems = math.prod(leaves[p.idx][sl].shape)
+            vals = router._unpack_leaf(lanes, (1, elems), p.dtype)
+            leaves[p.idx] = leaves[p.idx].at[sl].set(
+                vals.reshape(leaves[p.idx][sl].shape))
+        return leaves
+
+    # --------------------------------------------------------- codec ----
+
+    def _flat(self, state):
+        leaves, td = jax.tree_util.tree_flatten(state)
+        if td != self.treedef:
+            raise ValueError("decode state structure changed under PagedKV")
+        return leaves
+
+    def extract_block(self, state, slot: int, j: int) -> jnp.ndarray:
+        """Pack token-block ``j`` of ``slot`` -> ``(block_words,)`` u32."""
+        return self._pack(self._flat(state), self.paged, slot, j)
+
+    def extract_blocks(self, state, slot: int, js: Sequence[int]):
+        """Pack several blocks of one slot -> ``(len(js), block_words)``."""
+        leaves = self._flat(state)
+        return jnp.stack([self._pack(leaves, self.paged, slot, j)
+                          for j in js])
+
+    def insert_block(self, state, slot: int, j: int, row):
+        """Write a packed block back into ``slot`` (bit-exact inverse)."""
+        leaves = self._unpack_into(self._flat(state), self.paged, slot, j,
+                                   row)
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def insert_blocks(self, state, slot: int, js: Sequence[int], rows):
+        leaves = self._flat(state)
+        for i, j in enumerate(js):
+            leaves = self._unpack_into(leaves, self.paged, slot, j, rows[i])
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def extract_aux(self, state, slot: int) -> jnp.ndarray:
+        """Pack the sequence-free per-slot state -> ``(aux_words,)`` u32."""
+        return self._pack(self._flat(state), self.aux, slot, None)
+
+    def insert_aux(self, state, slot: int, row):
+        leaves = self._unpack_into(self._flat(state), self.aux, slot, None,
+                                   row)
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def zero_slot(self, state, slot: int):
+        """Zero every per-slot leaf of ``slot`` (paged and aux): the blank
+        canvas a swap-in paints stored blocks onto — rows no block covers
+        (gap between a request's extent and the shared decode clock, or a
+        brand-new request) must read as zeros, matching what the all-local
+        baseline holds there."""
+        leaves = self._flat(state)
+        for p in self.paged + self.aux:
+            sl = self._slot_slice(p, slot, None)
+            leaves[p.idx] = leaves[p.idx].at[sl].set(
+                jnp.zeros_like(leaves[p.idx][sl]))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+# ------------------------------------------------------- block space -----
+
+
+class BlockAllocator:
+    """Deterministic free-list over the cold region's block ids: alloc
+    returns the smallest free id (no RNG, no clock — identical request
+    histories allocate identically, which the eviction-determinism and
+    parity tests rely on)."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = int(n_blocks)
+        self._free = list(range(self.n_blocks - 1, -1, -1))  # pop() = min
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, k: int = 1) -> List[int]:
+        if k > len(self._free):
+            raise RuntimeError(
+                f"cold block space exhausted ({self.n_blocks} blocks)")
+        out = [self._free.pop() for _ in range(k)]
+        return out
+
+    def release(self, ids: Sequence[int]):
+        for b in ids:
+            self._free.append(int(b))
+        self._free.sort(reverse=True)
+
+
+@dataclass
+class PageTable:
+    """Per-request page map: token-block index -> cold block id, plus the
+    aux-page ids (sequence-free state padded into whole blocks) and the
+    request's extent (valid rows [0, extent) under the shared decode
+    clock)."""
+
+    blocks: Dict[int, int] = field(default_factory=dict)
+    aux: List[int] = field(default_factory=list)
+    extent: int = 0
+
+    def block_ids(self) -> List[int]:
+        """Stored seq-block ids in token order."""
+        return [self.blocks[j] for j in sorted(self.blocks)]
+
+    def all_ids(self) -> List[int]:
+        return self.block_ids() + list(self.aux)

@@ -515,3 +515,86 @@ def test_grouped_commit_budget_collapse_both_directions():
 def test_scale_suite_registered():
     assert "scale" in check.SUITES
     assert check.FIGURE_SUITES["fig_scale"] == ("scale", "rsi")
+
+
+# --------------------- two-tier KV paging fixtures (ISSUE 10) ------------
+# Seeded-violation twins for the serving engine's two fence obligations:
+# the evicted dirty block's write-back must be signaled before the same
+# cold rows page back in, and a slot-lock release must be signaled before
+# the slot is re-claimed.  Each bad fixture has a clean twin that differs
+# ONLY in the fence.
+
+
+def test_fixture_unfenced_writeback_races_page_in():
+    """Evict-write-back vs page-in: a plain (unsignaled) WRITE of the
+    evicted block's cold rows, then a READ paging the same block back in.
+    Without the completion fence nothing orders the pair — one-sided
+    READs bypass the remote CPU, so if the write-back is still in flight
+    the page-in returns torn rows."""
+    rec, t = _rec_tp()
+    cold = jnp.zeros((32,), jnp.uint32)
+    rows = jnp.array([8, 9, 10, 11], jnp.int32)     # block 2's rows
+    t.write(cold, rows, jnp.ones((4,), jnp.uint32), region="serve_kv",
+            tier="cold")                             # write-back, unfenced
+    t.read(cold, rows, region="serve_kv", tier="cold")   # page-in
+    rep = check.check_schedule(rec, target="fixture-writeback-pagein")
+    assert [v.rule for v in rep.violations] == ["rw-race"]
+    assert rep.violations[0].where == "serve_kv"
+
+
+def test_signaled_writeback_fences_page_in():
+    # the clean twin: write_async().wait() — the completion IS the fence
+    # (this is TieredStore._flush_writebacks's shipped path)
+    rec, t = _rec_tp()
+    cold = jnp.zeros((32,), jnp.uint32)
+    rows = jnp.array([8, 9, 10, 11], jnp.int32)
+    t.write_async(cold, rows, jnp.ones((4,), jnp.uint32),
+                  region="serve_kv", tier="cold").wait()
+    t.read(cold, rows, region="serve_kv", tier="cold")
+    assert check.check_schedule(rec).ok
+
+
+def test_fixture_unsignaled_release_races_reclaim():
+    """Slot release vs re-claim: an unsignaled release WRITE of a lock
+    word followed by a CAS re-claiming the same word is the lost-update
+    shape — the CAS may execute against the pre-release value.  The
+    paged engine's swap-out -> swap-in of the same slot does exactly
+    this sequence, so ``release_lock(signaled=True)`` exists."""
+    from repro.db import Database
+    rec = check.ScheduleRecorder()
+    db = Database(LocalTransport(recorder=rec))
+    slots = db.create_table("slots", 4, payload_words=1, num_timestamps=16)
+    (row,) = slots.claim_locks(1, tag=3)
+    slots.release_lock(row, signaled=False)          # plain WRITE
+    assert slots.claim_locks(1, tag=4) == [row]      # CAS re-claim
+    rep = check.check_schedule(rec, target="fixture-release-reclaim")
+    assert any(v.rule == "lost-update" for v in rep.violations), \
+        rep.render()
+
+
+def test_signaled_release_fences_reclaim():
+    from repro.db import Database
+    rec = check.ScheduleRecorder()
+    db = Database(LocalTransport(recorder=rec))
+    slots = db.create_table("slots", 4, payload_words=1, num_timestamps=16)
+    (row,) = slots.claim_locks(1, tag=3)
+    slots.release_lock(row, signaled=True)           # async WRITE + wait
+    assert slots.claim_locks(1, tag=4) == [row]
+    rep = check.check_schedule(rec, target="release-reclaim-signaled")
+    assert rep.ok, rep.render()
+
+
+def test_paged_decode_lints_clean():
+    # synthetic page-in/swap-out jaxprs: sort-free, collective-free,
+    # fori-free — the pack/unpack path stays pure gather/scatter
+    reps = check.lint_paged_decode(2)
+    assert len(reps) == 2
+    for rep in reps:
+        assert rep.ok, rep.render()
+    assert {r.target for r in reps} == {"serve/page_in[2b]",
+                                        "serve/swap_out[2b]"}
+
+
+def test_serve_suite_registered():
+    assert "serve" in check.SUITES
+    assert check.FIGURE_SUITES["fig_serve"] == ("serve", "sim")

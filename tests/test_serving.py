@@ -1,0 +1,231 @@
+"""Two-tier KV paging for the serving engine (ISSUE 10).
+
+Contracts guarded here:
+
+  * **paging parity** — paged decode output is bit-identical to the
+    all-local decode for ANY hot-tier size >= 1 block (hypothesis sweep
+    over hot sizes, plus the blocking/no-prefetch corner): the hot tier
+    changes traffic, never bits;
+  * **eviction determinism** — clock/LRU over block epochs with no
+    runtime RNG: two stores fed the same op sequence evict identically,
+    and the victim order matches the hand-computed expectation;
+  * **dirty write-back** — an evicted dirty block survives in the cold
+    region and pages back in bit-exact; ``drop`` discards without
+    write-back;
+  * **codec** — ``PagedKV`` round-trips blocks bit-exact and refuses
+    states it cannot page safely;
+  * **accounting** — per-tier READ/WRITE counters (with
+    ``peak_outstanding``/``queue_hist``) and the hot-rate summary land in
+    ``fabric_stats()``; slot-lock words all return to 0.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.db import Database
+from repro.fabric import LocalTransport, NamPool, TieredStore
+from repro.models import api
+from repro.serving import PagedKV, Request, ServeEngine
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduce_config(get_config("glm4-9b"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs():
+    return [Request(rid=i,
+                    prompt=np.array([2 + i, 5, 7][:2 + i % 2], np.int32),
+                    max_new_tokens=3 + i % 2)
+            for i in range(5)]
+
+
+def _run_paged(cfg, params, **kw):
+    eng = ServeEngine(cfg, params, slots=2, max_seq=64, paged=True,
+                      block_tokens=8, max_resident=4, **kw)
+    done = eng.run(_reqs())
+    eng.quiesce()
+    assert {r.rid for r in done} == {r.rid for r in _reqs()}
+    return eng, {r.rid: tuple(r.out) for r in done}
+
+
+@pytest.fixture(scope="module")
+def all_local(tiny):
+    cfg, params = tiny
+    eng, outs = _run_paged(cfg, params, hot_frac=1.0)
+    # all-local: the whole block space fits hot — zero cold traffic
+    assert eng.store.counters["misses"] == 0
+    assert eng.store.counters["writebacks"] == 0
+    return outs
+
+
+# ----------------------------------------------------- paging parity ----
+
+@pytest.mark.parametrize("hot", [1, 2, 3, 8, 40])
+def test_paged_parity_fixed_hot_sizes(tiny, all_local, hot):
+    _, outs = _run_paged(tiny[0], tiny[1], hot_blocks=hot)
+    assert outs == all_local
+
+
+def test_paged_parity_any_hot_size(tiny, all_local):
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    cfg, params = tiny
+
+    @hyp.settings(max_examples=5, deadline=None)
+    @hyp.given(hot=st.integers(1, 40))
+    def prop(hot):
+        _, outs = _run_paged(cfg, params, hot_blocks=hot)
+        assert outs == all_local
+
+    prop()
+
+
+def test_paged_parity_blocking_all_cold(tiny, all_local):
+    cfg, params = tiny
+    eng, outs = _run_paged(cfg, params, hot_blocks=1, prefetch=False)
+    assert outs == all_local
+    # a 1-block hot tier in front of 4-resident waves must actually thrash
+    assert eng.store.counters["misses"] > 0
+    assert eng.store.counters["writebacks"] > 0
+
+
+def test_paged_prefetch_lands_same_bits_and_covers_reads(tiny, all_local):
+    cfg, params = tiny
+    # 2 hot blocks in front of 4 resident requests: every wave pages
+    eng, outs = _run_paged(cfg, params, hot_blocks=2)
+    assert outs == all_local
+    s = eng.store.counters
+    assert s["prefetched"] > 0
+    # prefetch must cover most page-ins: misses (sync READs the compute
+    # cannot overlap) stay a small minority of all cold traffic
+    assert s["misses"] <= s["prefetched"]
+
+
+# ----------------------------------------------- eviction determinism ----
+
+def _script(store):
+    log = []
+    v = jnp.arange(4, dtype=jnp.uint32)[None, :]
+    for op, blocks in [("put", [0, 1]), ("get", [2]), ("get", [0]),
+                       ("put", [3]), ("get", [1]), ("get", [4]),
+                       ("put", [2]), ("get", [0, 3])]:
+        if op == "put":
+            store.put(blocks, jnp.concatenate([v + b for b in blocks]),
+                      dirty=True)
+        else:
+            store.get(blocks)
+        log.append((op, tuple(blocks), tuple(store.resident_blocks()),
+                    store.counters["evictions"]))
+    return log
+
+
+def test_eviction_order_deterministic():
+    def fresh():
+        pool, tp = NamPool(), LocalTransport()
+        return TieredStore(pool, tp, "kv", n_blocks=8, block_words=4,
+                           hot_blocks=2)
+
+    a, b = _script(fresh()), _script(fresh())
+    assert a == b                       # no RNG, no clock: bit-stable
+    # seeded expectation: clock/LRU victim is always the lowest-epoch
+    # slot, so residency after each op is fully determined
+    assert a[0][2] == (0, 1)            # put 0,1 fills both slots
+    assert a[1][2] == (2, 1)            # get 2 evicts LRU block 0
+    assert a[2][2] == (2, 0)            # get 0 evicts block 1
+    assert a[-1][2] == (0, 3)           # final working set
+    assert a[-1][3] == 8                # total evictions, exactly
+
+
+def test_dirty_writeback_round_trip():
+    pool, tp = NamPool(), LocalTransport()
+    store = TieredStore(pool, tp, "kv", n_blocks=8, block_words=4,
+                        hot_blocks=2)
+    vals = jnp.arange(12, dtype=jnp.uint32).reshape(3, 4)
+    store.put([0, 1, 2], vals, dirty=True)      # evicts block 0, dirty
+    assert store.counters["writebacks"] >= 1
+    got = store.get([0, 1, 2])                  # block 0 pages back in
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vals))
+    # signaled write-back: the WRITE went through the async+wait path
+    assert tp.stats()["write_cold"]["msgs"] >= 1
+
+
+def test_drop_discards_without_writeback():
+    pool, tp = NamPool(), LocalTransport()
+    store = TieredStore(pool, tp, "kv", n_blocks=4, block_words=4,
+                        hot_blocks=2)
+    store.put([0, 1], jnp.ones((2, 4), jnp.uint32), dirty=True)
+    wb = store.counters["writebacks"]
+    store.drop([0, 1])
+    assert store.counters["writebacks"] == wb   # discard, not flush
+    assert store.resident_blocks() == []
+    # the cold copy was never written: a later get returns zeros
+    assert int(store.get([0]).sum()) == 0
+
+
+def test_prefetch_is_one_batched_async_read():
+    pool, tp = NamPool(), LocalTransport()
+    store = TieredStore(pool, tp, "kv", n_blocks=8, block_words=4,
+                        hot_blocks=4)
+    calls0 = tp.stats().get("read_cold", {}).get("calls", 0)
+    assert store.prefetch([0, 1, 2, 3]) == 4
+    st = tp.stats()["read_cold"]
+    assert st["calls"] == calls0 + 1            # ONE verb call...
+    assert st["msgs"] >= 4                      # ...covering all blocks
+    store.get([0, 1, 2, 3])                     # lands from pending
+    assert store.counters["misses"] == 0
+    store.quiesce()
+
+
+# ------------------------------------------------------------- codec ----
+
+def test_pagedkv_rejects_unsafe_states():
+    good = {"caches": {"k": jnp.zeros((1, 2, 16, 4), jnp.bfloat16)},
+            "pos": jnp.zeros((), jnp.int32)}
+    with pytest.raises(ValueError):             # block must divide seq
+        PagedKV(good, slots=2, max_seq=16, block_tokens=5)
+    with pytest.raises(ValueError):             # unknown subtree
+        PagedKV({"mystery": jnp.zeros((2, 16))}, slots=2, max_seq=16,
+                block_tokens=4)
+    with pytest.raises(ValueError):             # slot axis mismatch
+        PagedKV(good, slots=3, max_seq=16, block_tokens=4)
+
+
+def test_pagedkv_block_round_trip_bit_exact(tiny):
+    cfg, params = tiny
+    slots, seq = 2, 32
+    state = api.init_decode_state(cfg, params, slots, seq)
+    kv = PagedKV(state, slots=slots, max_seq=seq, block_tokens=8)
+    step = jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t))
+    for _ in range(10):
+        _, state = step(params, state, jnp.ones((slots, 1), jnp.int32))
+    rows = kv.extract_blocks(state, 1, [0, 1])
+    restored = kv.insert_blocks(kv.zero_slot(state, 1), 1, [0, 1], rows)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------------------------- accounting ----
+
+def test_locks_freed_and_tier_counters_surface(tiny):
+    cfg, params = tiny
+    db = Database()
+    eng, _ = _run_paged(cfg, params, hot_blocks=2, db=db)
+    assert int(np.sum(np.asarray(eng.slot_words))) == 0
+    stats = db.fabric_stats()
+    assert "read_cold" in stats and "read_hot" in stats
+    for key in ("calls", "msgs", "bytes", "peak_outstanding",
+                "queue_hist"):
+        assert key in stats["read_cold"], key
+    rates = stats["tiers"]
+    assert 0.0 < rates["read_hot_rate"] <= 1.0
+    s = eng.store.stats()
+    assert 0.0 <= s["hit_rate"] <= 1.0
+    assert s["hot_blocks"] == 2

@@ -451,3 +451,58 @@ def test_doubling_workers_halves_uncontended_wallclock(pname):
         _uncontended_trace(8, 32)).makespan
     assert m8 <= 0.55 * m4, f"{pname}: {m8:.2e} vs {m4:.2e}"
     assert m8 >= 0.25 * m4                 # and not absurdly better
+
+
+# --------------------------- paged-serving read-storm anchors (ISSUE 10) --
+# fig_serve prices KV page-ins by replaying serve traces through this
+# simulator.  Two anchors pin that pricing: (1) N concurrent page-in
+# READs at window=1 cost exactly the analytic serial sum — the blocking
+# (no-prefetch) baseline IS the uncontended analytic limit; (2) at
+# KV-block sizes the NIC message pipeline, not bandwidth, is what binds
+# on EDR — the paper's Fig 4 small-message regime reopened for serving.
+
+
+@pytest.mark.parametrize("pname", ["rdma_fdr4x", "rdma_edr"])
+def test_read_storm_window1_equals_analytic_serial_sum(pname):
+    r = sim.read_storm(pname, n_reads=64, block_bytes=2048, window=1)
+    assert r["makespan_s"] == pytest.approx(r["analytic_serial_s"],
+                                            rel=1e-12)
+    assert r["makespan_s"] >= r["lower_bound_s"] - 1e-15
+    assert r["peak_outstanding"] == {"read": 1}
+
+
+def test_read_storm_msg_rate_binds_on_edr_at_kv_block_sizes():
+    # 1 KiB blocks sit below EDR's per_msg*bw crossover (~2017 bytes):
+    # per-READ NIC time exceeds wire time, so the storm is message-rate
+    # bound and the makespan can never beat the NIC pipeline floor
+    r = sim.read_storm("rdma_edr", n_reads=128, block_bytes=1024, window=0)
+    assert r["binding"] == "msg_rate"
+    assert r["nic_s"] > r["wire_s"]
+    assert r["makespan_s"] >= r["nic_s"] - 1e-15
+
+
+def test_read_storm_window_relaxation_monotone():
+    # opening the in-flight window can only help: unbounded <= w=4 <= w=1
+    mk = {w: sim.read_storm("rdma_edr", n_reads=64, block_bytes=1024,
+                            window=w)["makespan_s"] for w in (1, 4, 0)}
+    assert mk[0] <= mk[4] + 1e-15 <= mk[1] + 1e-15
+
+
+def test_percentile_and_completion_gaps():
+    vals = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert sim.percentile(vals, 0.0) == 1.0
+    assert sim.percentile(vals, 0.5) == 3.0
+    assert sim.percentile(vals, 0.99) == 5.0
+    assert sim.percentile(vals, 1.0) == 5.0
+    with pytest.raises(ValueError):
+        sim.percentile([], 0.5)
+    with pytest.raises(ValueError):
+        sim.percentile(vals, 1.5)
+    # gaps reconstruct the sorted completion times, first gap from t=0
+    trace = [sim.SimEvent(seq=i, verb="read", msgs=1, nbytes=4096,
+                          agent="a", src=0, dst=1) for i in range(4)]
+    res = sim.FabricSim(EDR, nodes=2, window=1).run(trace)
+    gaps = sim.completion_gaps(res, range(4))
+    assert len(gaps) == 4
+    assert all(g > 0 for g in gaps)
+    assert sum(gaps) == pytest.approx(res.makespan, rel=1e-12)
